@@ -1,0 +1,273 @@
+"""One benchmark per paper table/figure (§9 + §3 motivation).
+
+Every function returns a list of CSV rows (name, us_per_call, derived)
+where us_per_call is the simulation cost per traced access and `derived`
+carries the headline metric with the paper's value for comparison.
+Results come from the disk-cached sweep (repro.sim.sweep); anything
+missing is computed on demand.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import metrics, timing
+from repro.sim import trace_gen
+from repro.sim.runner import run_batch
+
+WLS = trace_gen.all_workloads()
+N = int(__import__("os").environ.get("REPRO_SIM_N", 150_000))
+
+
+def _sys(name):
+    t0 = time.time()
+    out = run_batch(name, n=N)
+    us = (time.time() - t0) * 1e6 / (N * len(WLS))
+    return out, us
+
+
+def _gmean_speedup(base, new):
+    sp = []
+    for w in WLS:
+        b, _, spec = base[w]
+        n, _, _ = new[w]
+        sp.append(timing.speedup(b, n, spec.ipa))
+    return float(np.exp(np.mean(np.log(sp))))
+
+
+def _avg(fn, out):
+    return float(np.mean([fn(out[w][0], out[w][2]) for w in WLS]))
+
+
+# ---------------------------------------------------------------- §3
+
+
+def fig4_ptw_latency():
+    out, us = _sys("radix")
+    walks = _avg(lambda s, sp: metrics.avg_walk_cycles(s), out)
+    return [("fig4_avg_ptw_latency_cycles", us,
+             f"{walks:.0f} (paper 137)")]
+
+
+def fig5_fig6_fig7_l2tlb_scaling():
+    rows = []
+    base, us = _sys("radix")
+    mpki0 = _avg(lambda s, sp: metrics.l2tlb_mpki(s, sp.ipa), base)
+    rows.append(("fig5_mpki_1.5K", us, f"{mpki0:.1f} (paper 39)"))
+    for tag, label in [("l2tlb_3k", "3K"), ("l2tlb_8k", "8K"),
+                       ("l2tlb_16k", "16K"), ("l2tlb_32k", "32K"),
+                       ("l2tlb_64k", "64K"), ("l2tlb_128k", "128K")]:
+        out, us = _sys(tag)
+        mpki = _avg(lambda s, sp: metrics.l2tlb_mpki(s, sp.ipa), out)
+        sp = _gmean_speedup(base, out)
+        rows.append((f"fig5_mpki_{label}", us, f"{mpki:.1f}"))
+        rows.append((f"fig6_speedup_opt_{label}", us,
+                     f"{(sp-1)*100:.1f}% (paper 64K: +4.0%)"))
+    for tag, label in [("l2tlb_8k_real", "8K@17c"),
+                       ("l2tlb_16k_real", "16K@23c"),
+                       ("l2tlb_32k_real", "32K@30c"),
+                       ("l2tlb_64k_real", "64K@39c")]:
+        out, us = _sys(tag)
+        sp = _gmean_speedup(base, out)
+        rows.append((f"fig7_speedup_real_{label}", us,
+                     f"{(sp-1)*100:.1f}% (paper 64K: +0.8%)"))
+    return rows
+
+
+def fig8_l3tlb():
+    base, _ = _sys("radix")
+    rows = []
+    for tag, label in [("l3tlb_64k_15", "15c"), ("l3tlb_64k_24", "24c"),
+                       ("l3tlb_64k_39", "39c")]:
+        out, us = _sys(tag)
+        sp = _gmean_speedup(base, out)
+        rows.append((f"fig8_l3tlb_{label}", us,
+                     f"{(sp-1)*100:.1f}% (paper 15c: +2.9%)"))
+    return rows
+
+
+def fig9_stlb_miss_latency():
+    rows = []
+    for tag, paperv in [("radix", 128), ("pom", 122), ("np", 275),
+                        ("pom_virt", 220)]:
+        out, us = _sys(tag)
+        lat = _avg(lambda s, sp: metrics.avg_l2tlb_miss_latency(s), out)
+        rows.append((f"fig9_l2miss_lat_{tag}", us,
+                     f"{lat:.0f} cyc (paper {paperv})"))
+    return rows
+
+
+def fig11_reuse():
+    out, us = _sys("radix")
+    zr = float(np.mean([metrics.zero_reuse_fraction(
+        out[w][1]["hist_reuse_data"]) for w in WLS]))
+    return [("fig11_zero_reuse_frac", us, f"{zr*100:.0f}% (paper 92%)")]
+
+
+# ---------------------------------------------------------------- Table 2
+
+
+def table2_ptwcp():
+    from repro.core import ptwcp_nn
+    out, us = _sys("radix_collect")
+    extras = [out[w][1] for w in WLS]
+    rows = []
+    for r in ptwcp_nn.run_study(extras):
+        rows.append((f"table2_{r.name}", us,
+                     f"acc {r.accuracy*100:.1f}% prec {r.precision*100:.1f}%"
+                     f" rec {r.recall*100:.1f}% F1 {r.f1*100:.1f}%"
+                     f" ({r.params_bytes}B)"
+                     + (" (paper: F1 80.7%, 24B)"
+                        if r.name == "Comparator" else "")))
+    return rows
+
+
+# ---------------------------------------------------------------- §9 native
+
+
+def fig20_native_speedup():
+    base, _ = _sys("radix")
+    rows = []
+    for tag, paperv in [("pom", "+1.2"), ("l3tlb_64k_15", "+2.9"),
+                        ("l2tlb_64k", "+4.0"), ("l2tlb_128k", "+7.1"),
+                        ("victima", "+7.4")]:
+        out, us = _sys(tag)
+        sp = _gmean_speedup(base, out)
+        rows.append((f"fig20_speedup_{tag}", us,
+                     f"{(sp-1)*100:.1f}% (paper {paperv}%)"))
+    return rows
+
+
+def fig21_ptw_reduction():
+    base, _ = _sys("radix")
+    rows = []
+    for tag, paperv in [("pom", 37), ("l2tlb_64k", 37),
+                        ("l2tlb_128k", 48), ("victima", 50)]:
+        out, us = _sys(tag)
+        red = float(np.mean([metrics.ptw_reduction(base[w][0], out[w][0])
+                             for w in WLS]))
+        rows.append((f"fig21_ptw_red_{tag}", us,
+                     f"{red*100:.0f}% (paper {paperv}%)"))
+    return rows
+
+
+def fig22_miss_latency():
+    base, _ = _sys("radix")
+    rows = []
+    for tag, paperv in [("pom", 3), ("victima", 22)]:
+        out, us = _sys(tag)
+        b = _avg(lambda s, sp: metrics.avg_l2tlb_miss_latency(s), base)
+        n = _avg(lambda s, sp: metrics.avg_l2tlb_miss_latency(s), out)
+        rows.append((f"fig22_l2miss_lat_red_{tag}", us,
+                     f"{(1-n/b)*100:.0f}% (paper {paperv}%)"))
+    return rows
+
+
+def fig23_reach():
+    out, us = _sys("victima")
+    reach = _avg(lambda s, sp: metrics.translation_reach_mb(s), out)
+    base_reach = metrics.baseline_l2tlb_reach_mb()
+    return [("fig23_translation_reach", us,
+             f"{reach:.0f} MB = {reach/base_reach:.0f}x L2TLB "
+             f"(paper 220MB/36x)")]
+
+
+def fig24_tlb_block_reuse():
+    out, us = _sys("victima")
+    hr = float(np.mean([metrics.high_reuse_fraction(
+        out[w][1]["hist_reuse_tlb"]) for w in WLS]))
+    return [("fig24_tlb_block_reuse_gt20", us,
+             f"{hr*100:.0f}% (paper 65%)")]
+
+
+def fig25_cache_size():
+    rows = []
+    for size, vtag, rtag in [("1MB", "victima_l2_1m", "radix_l2_1m"),
+                             ("2MB", "victima", "radix"),
+                             ("4MB", "victima_l2_4m", "radix_l2_4m"),
+                             ("8MB", "victima_l2_8m", "radix_l2_8m")]:
+        v, us = _sys(vtag)
+        r, _ = _sys(rtag)
+        red = float(np.mean([metrics.ptw_reduction(r[w][0], v[w][0])
+                             for w in WLS]))
+        rows.append((f"fig25_ptw_red_{size}", us,
+                     f"{red*100:.0f}% (paper 8MB: 63%)"))
+    return rows
+
+
+def fig26_policy():
+    ag, us = _sys("victima_agnostic")
+    aw, _ = _sys("victima")
+    sp = _gmean_speedup(ag, aw)
+    return [("fig26_tlb_aware_vs_agnostic", us,
+             f"+{(sp-1)*100:.1f}% (paper +1.8%)")]
+
+
+def ablation_ptwcp():
+    """Beyond-paper: Victima with insert-always (no PTW-CP)."""
+    nop, us = _sys("victima_noptwcp")
+    yes, _ = _sys("victima")
+    sp = _gmean_speedup(nop, yes)
+    return [("ablation_ptwcp_gain", us, f"+{(sp-1)*100:.1f}% vs no-PTWCP")]
+
+
+# ---------------------------------------------------------------- §9 virt
+
+
+def fig27_virt_speedup():
+    base, _ = _sys("np")
+    rows = []
+    for tag, paperv in [("pom_virt", "+7.2"), ("isp", "+22.7"),
+                        ("victima_virt", "+28.7")]:
+        out, us = _sys(tag)
+        sp = _gmean_speedup(base, out)
+        rows.append((f"fig27_virt_speedup_{tag}", us,
+                     f"{(sp-1)*100:.1f}% (paper {paperv}%)"))
+    return rows
+
+
+def fig28_guest_host_ptws():
+    base, _ = _sys("np")
+    out, us = _sys("victima_virt")
+    g = float(np.mean([metrics.ptw_reduction(base[w][0], out[w][0])
+                       for w in WLS]))
+    h = float(np.mean([
+        1.0 - float(out[w][0].n_host_ptw)
+        / max(float(base[w][0].n_host_ptw), 1.0) for w in WLS]))
+    return [("fig28_guest_ptw_red", us, f"{g*100:.0f}% (paper 50%)"),
+            ("fig28_host_ptw_red", us, f"{h*100:.0f}% (paper 99%)")]
+
+
+def fig29_virt_miss_latency():
+    base, _ = _sys("np")
+    rows = []
+    for tag, paperv in [("pom_virt", 20), ("isp", 54),
+                        ("victima_virt", 60)]:
+        out, us = _sys(tag)
+        b = _avg(lambda s, sp: metrics.avg_l2tlb_miss_latency(s), base)
+        n = _avg(lambda s, sp: metrics.avg_l2tlb_miss_latency(s), out)
+        rows.append((f"fig29_virt_l2miss_red_{tag}", us,
+                     f"{(1-n/b)*100:.0f}% (paper ~{paperv}%)"))
+    return rows
+
+
+ALL = [
+    fig4_ptw_latency,
+    fig5_fig6_fig7_l2tlb_scaling,
+    fig8_l3tlb,
+    fig9_stlb_miss_latency,
+    fig11_reuse,
+    table2_ptwcp,
+    fig20_native_speedup,
+    fig21_ptw_reduction,
+    fig22_miss_latency,
+    fig23_reach,
+    fig24_tlb_block_reuse,
+    fig25_cache_size,
+    fig26_policy,
+    ablation_ptwcp,
+    fig27_virt_speedup,
+    fig28_guest_host_ptws,
+    fig29_virt_miss_latency,
+]

@@ -1,0 +1,37 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows.  Heavy simulation results come from the disk cache populated by
+# ``python -m repro.sim.sweep`` (run benches after the sweep, or each bench
+# computes what it is missing).
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark function names")
+    args = ap.parse_args()
+
+    from benchmarks import paper, serving
+
+    fns = list(paper.ALL) + list(serving.ALL)
+    if args.only:
+        fns = [f for f in fns if args.only in f.__name__]
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for fn in fns:
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.3f},{derived}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{fn.__name__},nan,ERROR {e!r}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""End-to-end training driver: ~100M-param LM for a few hundred steps.
+
+Uses the full substrate: sharded data pipeline, AdamW + cosine schedule,
+remat'd scan-over-layers model, fault-tolerant trainer with async
+step-atomic checkpoints — on the local host mesh.
+
+    PYTHONPATH=src python examples/train_100m.py --steps 300
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, Pipeline
+from repro.models.model import build
+from repro.optim import adamw
+from repro.train.train_step import TrainConfig, init_state, make_train_step
+from repro.train.trainer import LoopConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_100m")
+    args = ap.parse_args()
+
+    # ~100M params: granite-3-2b geometry scaled down
+    cfg = dataclasses.replace(
+        get_config("granite-3-2b"),
+        name="granite-100m", n_layers=8, d_model=768, n_heads=12,
+        n_kv_heads=4, head_dim=64, d_ff=2048, vocab_size=32_000)
+    print(f"model: {cfg.name}  params ≈ {cfg.n_params()/1e6:.0f}M")
+
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    state = init_state(params)
+
+    tcfg = TrainConfig(opt=adamw.AdamWConfig(
+        lr=6e-4, warmup_steps=20, total_steps=args.steps))
+    step_fn = jax.jit(make_train_step(model, tcfg), donate_argnums=(0,))
+
+    data = Pipeline(DataConfig(vocab_size=cfg.vocab_size, batch=args.batch,
+                               seq_len=args.seq, seed=0))
+
+    def batch_fn(step):
+        return {"tokens": jnp.asarray(data.batch_at(step))}
+
+    trainer = Trainer(step_fn, batch_fn,
+                      LoopConfig(total_steps=args.steps, ckpt_every=50,
+                                 ckpt_dir=args.ckpt_dir, log_every=10))
+    state, start = trainer.resume_or_init(state)
+    if start:
+        print(f"resumed from checkpoint at step {start}")
+    state, hist = trainer.run(state, start)
+    print(f"done. loss {hist[0]:.3f} -> {hist[-1]:.3f} over "
+          f"{len(hist)} steps; stragglers={trainer.n_stragglers} "
+          f"restarts={trainer.n_restarts}")
+
+
+if __name__ == "__main__":
+    main()

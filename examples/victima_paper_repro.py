@@ -1,0 +1,64 @@
+"""Reproduce the paper's headline results end to end (native + virt).
+
+Runs the full evaluated-system matrix on all 11 workloads (cached sweep
+results are reused when present) and prints a side-by-side against the
+paper's reported numbers.
+
+    PYTHONPATH=src python examples/victima_paper_repro.py
+"""
+import numpy as np
+
+from repro.core import metrics, timing
+from repro.sim import trace_gen
+from repro.sim.runner import run_batch
+
+WLS = trace_gen.all_workloads()
+
+
+def gmean_speedup(base, new):
+    sp = [timing.speedup(base[w][0], new[w][0], base[w][2].ipa) for w in WLS]
+    return float(np.exp(np.mean(np.log(sp))))
+
+
+def main():
+    print("== native execution ==")
+    radix = run_batch("radix")
+    vic = run_batch("victima")
+    pom = run_batch("pom")
+    l2128 = run_batch("l2tlb_128k")
+    rows = [
+        ("Victima vs Radix", gmean_speedup(radix, vic), "+7.4%"),
+        ("Victima vs POM-TLB",
+         gmean_speedup(pom, vic), "+6.2%"),
+        ("Victima vs Opt.L2TLB-128K",
+         gmean_speedup(l2128, vic), "≈ +0.3%"),
+    ]
+    for name, sp, paper in rows:
+        print(f"  {name:28s} {(sp-1)*100:+6.1f}%   (paper {paper})")
+    red = np.mean([metrics.ptw_reduction(radix[w][0], vic[w][0])
+                   for w in WLS])
+    print(f"  {'PTW reduction':28s} {red*100:6.1f}%   (paper 50%)")
+    reach = np.mean([metrics.translation_reach_mb(vic[w][0]) for w in WLS])
+    print(f"  {'translation reach':28s} {reach:6.0f}MB   (paper 220MB)")
+
+    print("== virtualized execution (nested paging) ==")
+    npg = run_batch("np")
+    vvirt = run_batch("victima_virt")
+    isp = run_batch("isp")
+    pomv = run_batch("pom_virt")
+    rows = [
+        ("Victima vs NP", gmean_speedup(npg, vvirt), "+28.7%"),
+        ("Victima vs POM-TLB", gmean_speedup(pomv, vvirt), "+20.1%"),
+        ("Victima vs Ideal-SP", gmean_speedup(isp, vvirt), "+4.9%"),
+    ]
+    for name, sp, paper in rows:
+        print(f"  {name:28s} {(sp-1)*100:+6.1f}%   (paper {paper})")
+    h = np.mean([1 - float(vvirt[w][0].n_host_ptw)
+                 / max(float(npg[w][0].n_host_ptw), 1) for w in WLS])
+    g = np.mean([metrics.ptw_reduction(npg[w][0], vvirt[w][0]) for w in WLS])
+    print(f"  {'guest PTW reduction':28s} {g*100:6.1f}%   (paper 50%)")
+    print(f"  {'host PTW reduction':28s} {h*100:6.1f}%   (paper 99%)")
+
+
+if __name__ == "__main__":
+    main()

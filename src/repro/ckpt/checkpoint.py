@@ -1,0 +1,159 @@
+"""Step-atomic checkpoint manager (fault-tolerance substrate).
+
+Layout: <dir>/step_<N>/ {arrays.npz (flattened pytree), index.json
+(treedef + shapes + dtypes + step + digest)} written to a tmp dir and
+atomically renamed — a crash mid-write never corrupts the latest
+checkpoint.  Async mode hands the (host-fetched) state to a writer
+thread so the train loop never blocks on disk.  keep_n old steps are
+garbage-collected.  ``restore`` loads the newest complete step;
+``restore_resharded`` re-places arrays onto a *different* mesh
+(elastic scaling: checkpoints are mesh-agnostic by construction since
+we store full logical arrays).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy can neither savez nor astype bf16 natively — round-trip via uint16
+_EXOTIC = {"bfloat16": ml_dtypes.bfloat16}
+
+
+def _encode(a: np.ndarray) -> np.ndarray:
+    if str(a.dtype) in _EXOTIC:
+        return a.view(np.uint16)
+    return a
+
+
+def _decode(a: np.ndarray, dtype_str: str) -> np.ndarray:
+    if dtype_str in _EXOTIC:
+        return a.view(_EXOTIC[dtype_str])
+    return a
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def _digest(arrays) -> str:
+    h = hashlib.sha256()
+    for a in arrays:
+        h.update(np.ascontiguousarray(a).tobytes()[:4096])
+    return h.hexdigest()[:16]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_n: int = 3,
+                 async_write: bool = True):
+        self.dir = directory
+        self.keep_n = keep_n
+        self.async_write = async_write
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------ save
+
+    def save(self, step: int, state: Any, block: bool = False):
+        leaves, treedef = _flatten(state)
+        host = [np.asarray(jax.device_get(x)) for x in leaves]
+        if self.async_write and not block:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host, str(treedef)),
+                daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host, str(treedef))
+
+    def _write(self, step: int, host, treedef_str: str):
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{f"a{i}": _encode(a) for i, a in enumerate(host)})
+        index = {
+            "step": step,
+            "n_arrays": len(host),
+            "treedef": treedef_str,
+            "shapes": [list(a.shape) for a in host],
+            "dtypes": [str(a.dtype) for a in host],
+            "digest": _digest(host),
+        }
+        with open(os.path.join(tmp, "index.json"), "w") as f:
+            json.dump(index, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic commit
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep_n]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------ load
+
+    def all_steps(self):
+        out = []
+        for d in sorted(os.listdir(self.dir)):
+            if d.startswith("step_") and not d.endswith(".tmp") \
+                    and os.path.exists(os.path.join(self.dir, d,
+                                                    "index.json")):
+                out.append(int(d.split("_")[1]))
+        return out
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like: Any, step: Optional[int] = None):
+        """Restore into the structure of `like` (validates the index).
+        Returns (state, step) or (None, None) if no checkpoint."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None, None
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "index.json")) as f:
+            index = json.load(f)
+        data = np.load(os.path.join(d, "arrays.npz"))
+        arrays = [_decode(data[f"a{i}"], index["dtypes"][i])
+                  for i in range(index["n_arrays"])]
+        if _digest(arrays) != index["digest"]:
+            raise IOError(f"checkpoint step {step} digest mismatch")
+        leaves, treedef = _flatten(like)
+        assert len(leaves) == len(arrays), "structure mismatch"
+        out = []
+        for ref, a in zip(leaves, arrays):
+            assert tuple(ref.shape) == tuple(a.shape), (ref.shape, a.shape)
+            out.append(a if str(a.dtype) == str(ref.dtype)
+                       else a.astype(ref.dtype))
+        return jax.tree.unflatten(treedef, out), step
+
+    def restore_resharded(self, like_specs: Any, step: Optional[int] = None):
+        """Elastic restore: place arrays per ShapeDtypeStruct+sharding specs
+        of a NEW mesh (possibly different size than at save time)."""
+        state, step = self.restore(like_specs, step)
+        if state is None:
+            return None, None
+        placed = jax.tree.map(
+            lambda a, s: jax.device_put(a, s.sharding)
+            if getattr(s, "sharding", None) is not None else jax.device_put(a),
+            state, like_specs)
+        return placed, step

@@ -1,0 +1,29 @@
+"""Config registry: one module per assigned architecture."""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "qwen3-32b",
+    "phi3-medium-14b",
+    "granite-3-2b",
+    "yi-6b",
+    "mamba2-2.7b",
+    "mixtral-8x7b",
+    "granite-moe-1b-a400m",
+    "seamless-m4t-medium",
+    "recurrentgemma-2b",
+    "qwen2-vl-7b",
+]
+
+
+def get_config(name: str):
+    mod = importlib.import_module(
+        "repro.configs." + name.replace("-", "_").replace(".", "_"))
+    return mod.CONFIG
+
+
+def get_smoke_config(name: str):
+    mod = importlib.import_module(
+        "repro.configs." + name.replace("-", "_").replace(".", "_"))
+    return mod.SMOKE

@@ -1,0 +1,69 @@
+"""Derived metrics over simulator Stats (the paper's reported quantities)."""
+from __future__ import annotations
+
+import numpy as np
+
+KB = 1 << 10
+MB = 1 << 20
+
+
+def l2tlb_mpki(stats, ipa: float) -> float:
+    instrs = float(stats.n_access) * ipa
+    return float(stats.n_l2tlb_miss) * 1000.0 / max(instrs, 1.0)
+
+
+def avg_walk_cycles(stats) -> float:
+    return float(stats.sum_walk_cyc) / max(float(stats.n_demand_ptw), 1.0)
+
+
+def avg_l2tlb_miss_latency(stats) -> float:
+    """Cycles past the L2 TLB probe, averaged over L2-TLB misses
+    (paper Figs. 9/22/29)."""
+    return float(stats.sum_l2miss_cyc) / max(float(stats.n_l2tlb_miss), 1.0)
+
+
+def ptw_reduction(base_stats, new_stats) -> float:
+    b = float(base_stats.n_demand_ptw)
+    return 1.0 - float(new_stats.n_demand_ptw) / max(b, 1.0)
+
+
+def translation_reach_mb(stats) -> float:
+    """Average extra reach from TLB blocks resident in the L2 cache,
+    *assuming 4KB pages* exactly as the paper's Fig. 23 does (8×4KB=32KB
+    per block).  ``true_reach_mb`` weighs 2M blocks by real coverage."""
+    n = max(float(stats.n_access), 1.0)
+    blocks = (float(stats.sum_tlb4_live) + float(stats.sum_tlb2_live)) / n
+    return blocks * 8 * 4 * KB / MB
+
+
+def true_reach_mb(stats) -> float:
+    n = max(float(stats.n_access), 1.0)
+    avg4 = float(stats.sum_tlb4_live) / n
+    avg2 = float(stats.sum_tlb2_live) / n
+    return (avg4 * 8 * 4 * KB + avg2 * 8 * 2 * MB) / MB
+
+
+def baseline_l2tlb_reach_mb(entries: int = 1536) -> float:
+    return entries * 4 * KB / MB  # paper Fig. 23 assumes 4K pages
+
+
+def reuse_distribution(hist: np.ndarray) -> np.ndarray:
+    """Normalize a REUSE_BUCKETS histogram to fractions."""
+    h = np.asarray(hist, dtype=np.float64)
+    return h / max(h.sum(), 1.0)
+
+
+def zero_reuse_fraction(hist: np.ndarray) -> float:
+    return float(reuse_distribution(hist)[0])
+
+
+def high_reuse_fraction(hist: np.ndarray, thresh: int = 21) -> float:
+    """Fraction of blocks with reuse > 20 (paper Fig. 24 'high reuse')."""
+    return float(reuse_distribution(hist)[thresh:].sum())
+
+
+def walk_latency_histogram(stats):
+    """(bucket_start_cycles, fraction) pairs for the Fig. 4 distribution."""
+    h = np.asarray(stats.hist_walk, dtype=np.float64)
+    frac = h / max(h.sum(), 1.0)
+    return [(i * 10, f) for i, f in enumerate(frac)]

@@ -1,0 +1,40 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On the CPU backend everything runs in interpret mode automatically (the
+Mosaic TPU compiler is unavailable), so the same call sites work in tests,
+examples, and on real TPUs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_attention as _pa
+from repro.kernels import ssd_scan as _ssd
+
+_INTERPRET = jax.default_backend() == "cpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=None,
+                    block_q=128, block_k=128, interpret=None):
+    """q [B,S,H,hd]; k,v [B,Sk,K,hd] (model layout). Returns [B,S,H,hd]."""
+    interpret = _INTERPRET if interpret is None else interpret
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    o = _fa.flash_attention(qt, kt, vt, causal=causal, window=window,
+                            block_q=block_q, block_k=block_k,
+                            interpret=interpret)
+    return jnp.swapaxes(o, 1, 2)
+
+
+def paged_attention(q, k_pages, v_pages, tables, lens, *, interpret=None):
+    interpret = _INTERPRET if interpret is None else interpret
+    return _pa.paged_attention(q, k_pages, v_pages, tables, lens,
+                               interpret=interpret)
+
+
+def ssd_intra(x, dt, dA, B, C, *, interpret=None):
+    interpret = _INTERPRET if interpret is None else interpret
+    return _ssd.ssd_intra(x, dt, dA, B, C, interpret=interpret)

@@ -1,0 +1,110 @@
+"""Pallas TPU paged-attention decode kernel.
+
+The block table (post-VTC translation: logical block → physical KV page)
+is a *scalar-prefetch* operand: it is staged into SMEM before the grid
+runs and indexed inside the BlockSpec index maps — the physical page
+gather happens in the kernel's DMA pipeline, never materializing a
+contiguous KV copy in HBM.  This is the TPU embodiment of a "TLB hit":
+translation metadata rides in scalar memory while payload pages stream
+through VMEM (DESIGN.md §2.2).
+
+Grid (B, K, nb): per request × kv-head × logical block, online softmax
+over pages, GQA handled by a [G, hd] query tile per kv head.
+
+TARGET: TPU.  VALIDATED: interpret=True vs ``ref.paged_attention_reference``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(tables, lens,           # scalar-prefetch operands (SMEM)
+            q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *,
+            page: int, nb: int):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ctx = lens[b]
+    base = i * page
+    live = base < ctx  # any token of this block in context?
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, ...].astype(jnp.float32)            # [G, hd]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)        # [page, hd]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)          # [G, page]
+        s = s * (1.0 / (q.shape[-1] ** 0.5))
+        tok = base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(tok < ctx, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(i == nb - 1)
+    def _fin():
+        o_ref[0, ...] = (acc_ref[...]
+                         / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pages, v_pages, tables, lens, *,
+                    interpret: bool = False):
+    """q [B,H,hd]; k_pages/v_pages [P, page, K, hd]; tables [B, nb] int32
+    physical page ids; lens [B] context lengths.  Returns [B,H,hd]."""
+    B, H, hd = q.shape
+    P, page, K, _ = k_pages.shape
+    G = H // K
+    nb = tables.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, K, nb),
+        in_specs=[
+            pl.BlockSpec((1, G, hd),
+                         lambda b, kh, i, tables, lens: (b, kh, 0)),
+            pl.BlockSpec((1, page, 1, hd),
+                         lambda b, kh, i, tables, lens:
+                         (tables[b, i], 0, kh, 0)),
+            pl.BlockSpec((1, page, 1, hd),
+                         lambda b, kh, i, tables, lens:
+                         (tables[b, i], 0, kh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd),
+                               lambda b, kh, i, tables, lens: (b, kh, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_kernel, page=page, nb=nb)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        interpret=interpret,
+    )(tables, lens, q, k_pages, v_pages)
+    return out

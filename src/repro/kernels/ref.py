@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel (fp32 math, no tiling).
+
+Tests sweep shapes/dtypes and assert_allclose kernels (interpret=True)
+against these references.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_reference(q, k, v, *, causal=True, window=None):
+    """q [B,H,S,hd]; k,v [B,K,Sk,hd] (GQA). Returns [B,H,S,hd] fp32-exact."""
+    B, H, S, hd = q.shape
+    K = k.shape[1]
+    G = H // K
+    kf = jnp.repeat(k, G, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, G, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kf)
+    s = s / (hd ** 0.5)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((S, k.shape[2]), bool)
+    if causal:
+        mask = mask & (qpos >= kpos)
+    if window is not None:
+        mask = mask & (qpos - kpos < window)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)
+
+
+def paged_attention_reference(q, k_pages, v_pages, tables, lens):
+    """q [B,H,hd]; pages [P,page,K,hd]; tables [B,nb]; lens [B]."""
+    B, H, hd = q.shape
+    P, page, K, _ = k_pages.shape
+    G = H // K
+    nb = tables.shape[1]
+    # gather logical KV [B, nb*page, K, hd]
+    k = k_pages[tables].reshape(B, nb * page, K, hd).astype(jnp.float32)
+    v = v_pages[tables].reshape(B, nb * page, K, hd).astype(jnp.float32)
+    kf = jnp.repeat(k, G, axis=2)
+    vf = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                   jnp.moveaxis(kf, 1, 1)) / (hd ** 0.5)
+    tok = jnp.arange(nb * page)[None, None, :]
+    s = jnp.where(tok < lens[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", p, vf)
+    return out.astype(q.dtype)
+
+
+def ssd_intra_reference(x, dt, dA, B, C):
+    """Intra-chunk SSD block for ONE (batch, chunk, group, rep):
+    x [q,p]; dt,dA [q]; B,C [q,n].  Returns (y [q,p], S_loc [n,p])."""
+    q = x.shape[0]
+    cs = jnp.cumsum(dA)
+    CB = jnp.einsum("in,jn->ij", C.astype(jnp.float32),
+                    B.astype(jnp.float32))
+    L = jnp.exp(jnp.clip(cs[:, None] - cs[None, :], -60.0, 0.0))
+    L = L * jnp.tril(jnp.ones((q, q)))
+    W = CB * L * dt[None, :]
+    y = W @ x.astype(jnp.float32)
+    decay_end = jnp.exp(jnp.clip(cs[-1] - cs, -60.0, 0.0))
+    S_loc = jnp.einsum("qn,q,qp->np", B.astype(jnp.float32),
+                       decay_end * dt, x.astype(jnp.float32))
+    return y.astype(x.dtype), S_loc.astype(x.dtype)

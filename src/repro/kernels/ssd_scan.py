@@ -1,0 +1,76 @@
+"""Pallas TPU kernel for the mamba2 SSD intra-chunk block.
+
+Grid (b·nc, g, r): each invocation computes, for one chunk × head,
+  y_intra = (C·Bᵀ ⊙ exp(cs_i - cs_j) ⊙ tril ⊙ dt_j) @ x      [q, p]
+  S_loc   = (B ⊙ (exp(cs_end - cs)·dt))ᵀ @ x                  [n, p]
+with q = chunk = 128, n = state = 128 → all three contractions are
+128×128 MXU tiles.  The inter-chunk prefix recurrence stays in XLA
+(associative_scan) — it is O(s/q) and latency-, not compute-bound.
+
+TARGET: TPU.  VALIDATED: interpret=True vs ``ref.ssd_intra_reference``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, dt_ref, da_ref, b_ref, c_ref, y_ref, s_ref, *, q: int):
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # [q, p]
+    dt = dt_ref[0, :, 0, :].astype(jnp.float32)      # [q, 1]
+    dA = da_ref[0, :, 0, :].astype(jnp.float32)      # [q, 1]
+    Bm = b_ref[0, :, 0, :].astype(jnp.float32)       # [q, n]
+    Cm = c_ref[0, :, 0, :].astype(jnp.float32)       # [q, n]
+
+    cs = jnp.cumsum(dA[:, 0])                        # [q]
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [q,q]
+    diff = cs[:, None] - cs[None, :]
+    L = jnp.exp(jnp.clip(diff, -60.0, 0.0))
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    L = jnp.where(ii >= jj, L, 0.0)
+    W = CB * L * dt[:, 0][None, :]
+    y = jax.lax.dot_general(W, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    decay_end = jnp.exp(jnp.clip(cs[-1] - cs, -60.0, 0.0)) * dt[:, 0]
+    Bw = Bm * decay_end[:, None]                     # [q, n]
+    S = jax.lax.dot_general(Bw, x, (((0,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [n, p]
+    s_ref[0, 0, :, :] = S.astype(s_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra(x, dt, dA, B, C, *, interpret: bool = False):
+    """x [T,q,R,p]; dt,dA [T,q,R,1]; B,C [T,q,R,n] where T = b·nc flattened
+    chunks and R = g·r flattened heads.  Returns (y [T,q,R,p],
+    S_loc [T,R,n,p])."""
+    T, q, R, p = x.shape
+    n = B.shape[-1]
+    kernel = functools.partial(_kernel, q=q)
+    y, S = pl.pallas_call(
+        kernel,
+        grid=(T, R),
+        in_specs=[
+            pl.BlockSpec((1, q, 1, p), lambda t, h: (t, 0, h, 0)),
+            pl.BlockSpec((1, q, 1, 1), lambda t, h: (t, 0, h, 0)),
+            pl.BlockSpec((1, q, 1, 1), lambda t, h: (t, 0, h, 0)),
+            pl.BlockSpec((1, q, 1, n), lambda t, h: (t, 0, h, 0)),
+            pl.BlockSpec((1, q, 1, n), lambda t, h: (t, 0, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q, 1, p), lambda t, h: (t, 0, h, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda t, h: (t, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, q, R, p), x.dtype),
+            jax.ShapeDtypeStruct((T, R, n, p), x.dtype),
+        ],
+        interpret=interpret,
+    )(x, dt, dA, B, C)
+    return y, S

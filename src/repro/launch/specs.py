@@ -1,0 +1,74 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape) cell.
+
+No device allocation ever happens here — everything is
+ShapeDtypeStruct(+NamedSharding), the AOT-lowering pattern.  Modality
+frontends are stubs per the assignment: audio/vision cells get
+precomputed frame/patch embedding inputs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.dist import sharding as shd
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def train_batch_specs(cfg: ModelConfig, sc: ShapeConfig, mesh):
+    B, S = sc.global_batch, sc.seq_len
+    dp = shd.dp_axes(mesh)
+    out = {"tokens": _sds((B, S), jnp.int32,
+                          NamedSharding(mesh, P(dp, None)))}
+    if cfg.family == "vlm":
+        Pn = min(cfg.n_patches, S // 2)
+        out["vision_embeds"] = _sds((B, Pn, cfg.d_model), jnp.bfloat16,
+                                    NamedSharding(mesh, P(dp, None, None)))
+        out["positions3"] = _sds((3, B, S), jnp.int32,
+                                 NamedSharding(mesh, P(None, dp, None)))
+    if cfg.family == "encdec":
+        out["src_embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16,
+                                 NamedSharding(mesh, P(dp, None, None)))
+    return out
+
+
+def param_specs(model, cfg: ModelConfig, mesh, mode: str = "fsdp"):
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    shards = shd.param_shardings(mesh, shapes, mode)
+    return jax.tree.map(
+        lambda s, h: _sds(s.shape, s.dtype, h), shapes, shards)
+
+
+def cache_specs(model, cfg: ModelConfig, sc: ShapeConfig, mesh):
+    B, S = sc.global_batch, sc.seq_len
+    shapes = jax.eval_shape(lambda: model.init_cache(B, S))
+    shards = shd.cache_shardings(mesh, shapes, B)
+    return jax.tree.map(
+        lambda s, h: _sds(s.shape, s.dtype, h), shapes, shards)
+
+
+def decode_input_specs(cfg: ModelConfig, sc: ShapeConfig, mesh):
+    B = sc.global_batch
+    dp = shd.dp_axes(mesh)
+    bspec = P(dp) if B >= 16 else P()
+    return {
+        "tokens": _sds((B, 1), jnp.int32,
+                       NamedSharding(mesh, P(dp, None) if B >= 16 else P())),
+        "pos": _sds((B,), jnp.int32, NamedSharding(mesh, bspec)),
+    }
+
+
+def input_specs(model, cfg: ModelConfig, sc: ShapeConfig, mesh):
+    """All lowering inputs for one cell, keyed by step-fn argument."""
+    if sc.kind == "train":
+        return {"batch": train_batch_specs(cfg, sc, mesh)}
+    if sc.kind == "prefill":
+        return {"batch": train_batch_specs(cfg, sc, mesh)}
+    return {
+        "cache": cache_specs(model, cfg, sc, mesh),
+        **decode_input_specs(cfg, sc, mesh),
+    }

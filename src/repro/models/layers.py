@@ -1,0 +1,331 @@
+"""Shared transformer building blocks (pure-functional, pjit-friendly).
+
+Params are nested dicts of jnp arrays; every layer provides
+``init(key, cfg) -> params`` and ``apply(params, ...) -> out``.  Activation
+sharding constraints are applied by the caller (``repro.dist.sharding``) —
+layers stay mesh-agnostic.  All matmuls accumulate in fp32
+(``preferred_element_type``) and cast back to the activation dtype, which
+is the TPU-idiomatic MXU pattern.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, shape, in_axis=0, dtype=jnp.float32):
+    fan_in = shape[in_axis]
+    return (jax.random.normal(key, shape, jnp.float32)
+            * (1.0 / jnp.sqrt(fan_in))).astype(dtype)
+
+
+_CPU = jax.default_backend() == "cpu"
+
+
+def einsum_f32(spec, *ops, out_dtype=None):
+    """einsum with fp32 accumulation (MXU-idiomatic on TPU).
+
+    The CPU DotThunk lacks several bf16×bf16→f32 batched-dot kernels, so on
+    the CPU backend operands are upcast instead — numerically identical
+    (fp32 accumulate), TPU path untouched."""
+    if _CPU and any(o.dtype == jnp.bfloat16 for o in ops):
+        y = jnp.einsum(spec, *[o.astype(jnp.float32) for o in ops])
+    else:
+        y = jnp.einsum(spec, *ops, preferred_element_type=jnp.float32)
+    return y if out_dtype is None else y.astype(out_dtype)
+
+
+def matmul(x, w):
+    """bf16 × bf16 → fp32 accumulate → bf16 (MXU-shaped)."""
+    return einsum_f32("...d,df->...f", x, w, out_dtype=x.dtype)
+
+
+# ---------------------------------------------------------------- norms
+
+
+def rms_norm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rms_norm(p, x, eps: float):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- RoPE
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                     / head_dim)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, hd]; positions: [..., S] (broadcastable)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    ang = ang[..., None, :]                             # [..., S, 1, hd/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections):
+    """Multimodal RoPE (qwen2-vl): positions3 [3, B, S] are the (t, h, w)
+    position-id streams; `sections` split the hd/2 rotary dims among them."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    sec = jnp.cumsum(jnp.asarray(sections))
+    idx = jnp.arange(hd // 2)
+    which = ((idx >= sec[0]).astype(jnp.int32)
+             + (idx >= sec[1]).astype(jnp.int32))       # [hd/2] ∈ {0,1,2}
+    pos_j = positions3[which]                           # [hd/2, B, S]
+    ang = (jnp.moveaxis(pos_j, 0, -1).astype(jnp.float32) * freqs)  # [B,S,hd/2]
+    ang = ang[..., None, :]                             # [B, S, 1, hd/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- attention
+
+
+def attn_init(key, cfg: ModelConfig):
+    D, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (D, H * hd), dtype=dt),
+        "wk": dense_init(ks[1], (D, K * hd), dtype=dt),
+        "wv": dense_init(ks[2], (D, K * hd), dtype=dt),
+        "wo": dense_init(ks[3], (H * hd, D), dtype=dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rms_norm_init(hd)
+        p["k_norm"] = rms_norm_init(hd)
+    return p
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: Optional[int]):
+    """Additive attention bias [..., Sq, Sk] from position ids."""
+    d = q_pos[..., :, None] - k_pos[..., None, :]
+    m = jnp.ones(d.shape, jnp.bool_)
+    if causal:
+        m = m & (d >= 0)
+    if window is not None:
+        m = m & (d < window)
+    return jnp.where(m, 0.0, -1e30).astype(jnp.float32)
+
+
+def attention_scores(q, k, v, bias):
+    """q [B,Sq,H,hd], k/v [B,Sk,K,hd] (GQA: H % K == 0)."""
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, hd)
+    logits = einsum_f32("bqkgh,bskh->bkgqs", qg, k)
+    logits = logits / jnp.sqrt(hd).astype(jnp.float32)
+    logits = logits + bias[:, None, None, :, :]
+    w = jax.nn.softmax(logits, axis=-1)
+    out = einsum_f32("bkgqs,bskh->bqkgh", w.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, q_pos, k_pos, causal: bool,
+                      window: Optional[int], chunk: int = 1024):
+    """Flash-style online-softmax attention, scanning KV in chunks.
+
+    Pure-JAX analogue of the Pallas flash kernel (kernels/flash_attention):
+    O(S·chunk) live memory instead of O(S²) — this is what long-sequence
+    prefill lowers to in the dry-run (Pallas/Mosaic is TPU-only).
+    q [B,Sq,H,hd]; k,v [B,Sk,K,hd]; q_pos [B,Sq]; k_pos [B,Sk].
+    """
+    B, Sq, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    assert Sk % chunk == 0, (Sk, chunk)
+    nk = Sk // chunk
+    qg = q.reshape(B, Sq, K, G, hd)
+    ks = jnp.moveaxis(k.reshape(B, nk, chunk, K, hd), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, nk, chunk, K, hd), 1, 0)
+    kps = jnp.moveaxis(k_pos.reshape(B, nk, chunk), 1, 0)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kc, vc, kpc = inp
+        s = einsum_f32("bqkgh,bckh->bkgqc", qg, kc) * scale
+        d = q_pos[:, None, None, :, None] - kpc[:, None, None, None, :]
+        msk = jnp.ones_like(d, jnp.bool_)
+        if causal:
+            msk = msk & (d >= 0)
+        if window is not None:
+            msk = msk & (d < window)
+        s = jnp.where(msk, s, -1e30)
+        m2 = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m2[..., None])
+        corr = jnp.exp(m - m2)
+        l2 = l * corr + jnp.sum(p, axis=-1)
+        pv = einsum_f32("bkgqc,bckh->bkgqh", p.astype(vc.dtype), vc)
+        acc2 = acc * corr[..., None] + pv
+        return (m2, l2, acc2), ()
+
+    m0 = jnp.full((B, K, G, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, K, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, K, G, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, kps))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Sq, K * G, hd)
+    return out.astype(q.dtype)
+
+
+import os
+_MASK_KV_UPDATE = os.environ.get("REPRO_MASK_KV", "0") == "1"
+
+ATTN_CHUNK_THRESHOLD = 8192  # Sq·Sk above which the chunked path is used
+
+
+def attn_apply(p, cfg: ModelConfig, x, positions, *, causal=True,
+               window=None, kv=None, kv_positions=None, positions3=None):
+    """Full-sequence attention (train / prefill). Optional cross-attention
+    via `kv` (encoder output). Returns (out, (k, v)) so callers can build
+    decode caches."""
+    B, S, D = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = matmul(x, p["wq"]).reshape(B, S, H, hd)
+    src = x if kv is None else kv
+    Sk = src.shape[1]
+    k = matmul(src, p["wk"]).reshape(B, Sk, K, hd)
+    v = matmul(src, p["wv"]).reshape(B, Sk, K, hd)
+    if cfg.qk_norm:
+        q = rms_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_norm(p["k_norm"], k, cfg.norm_eps)
+    kpos = kv_positions if kv_positions is not None else positions
+    if kv is None:  # self-attention → rotary
+        if positions3 is not None and cfg.mrope_sections:
+            q = apply_mrope(q, positions3, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, positions3, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, kpos, cfg.rope_theta)
+    if S * Sk > ATTN_CHUNK_THRESHOLD * ATTN_CHUNK_THRESHOLD // 64:
+        out = chunked_attention(q, k, v, positions, kpos,
+                                causal and kv is None, window)
+    else:
+        bias = _mask_bias(positions, kpos, causal and kv is None, window)
+        out = attention_scores(q, k, v, bias)
+    return matmul(out.reshape(B, S, H * hd), p["wo"]), (k, v)
+
+
+def attn_decode(p, cfg: ModelConfig, x, pos, k_cache, v_cache, *,
+                window=None, positions3=None):
+    """Single-token decode against a (possibly seq-sharded) KV cache.
+
+    x [B,1,D]; pos [B] current position; caches [B,S,K,hd].
+    Returns (out, k_cache, v_cache)."""
+    B, _, D = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    S = k_cache.shape[1]
+    q = matmul(x, p["wq"]).reshape(B, 1, H, hd)
+    k = matmul(x, p["wk"]).reshape(B, 1, K, hd)
+    v = matmul(x, p["wv"]).reshape(B, 1, K, hd)
+    if cfg.qk_norm:
+        q = rms_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_norm(p["k_norm"], k, cfg.norm_eps)
+    if positions3 is not None and cfg.mrope_sections:
+        q = apply_mrope(q, positions3, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions3, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    # write the new KV at slot pos (ring for windowed caches).
+    # B==1 (long-context) caches shard their seq axis across the whole
+    # mesh; a batched-index scatter there triggers GSPMD's "involuntary
+    # full rematerialization" (an all-gather of the entire cache per
+    # token).  The elementwise masked update is resharding-free and
+    # SPMD-partitions natively (§Perf B1: −99.9% collective bytes).
+    slot = pos if window is None else pos % S
+    if B == 1 or _MASK_KV_UPDATE:
+        sel = (jnp.arange(S)[None, :] == slot[:, None])[..., None, None]
+        k_cache = jnp.where(sel, k.astype(k_cache.dtype), k_cache)
+        v_cache = jnp.where(sel, v.astype(v_cache.dtype), v_cache)
+    else:
+        bidx = jnp.arange(B)
+        k_cache = k_cache.at[bidx, slot].set(k[:, 0])
+        v_cache = v_cache.at[bidx, slot].set(v[:, 0])
+    kpos = jnp.arange(S)[None, :]  # logical positions of cache slots
+    if window is not None:
+        # ring layout: slot i holds the unique position p in
+        # [max(0, pos+1-S), pos] with p % S == i
+        ring_base = jnp.maximum(pos + 1 - S, 0)[:, None]
+        kpos = ring_base + (kpos - ring_base) % S
+    valid = (kpos <= pos[:, None]) & (kpos >= 0)
+    if window is not None:
+        valid = valid & (kpos > pos[:, None] - window)
+    # [B,1,1,S] to broadcast against logits [B,K,G,S]
+    bias = jnp.where(valid, 0.0, -1e30).astype(jnp.float32)[:, None, None, :]
+    G = H // K
+    qg = q.reshape(B, K, G, hd)
+    logits = einsum_f32("bkgh,bskh->bkgs", qg, k_cache)
+    logits = logits / jnp.sqrt(hd).astype(jnp.float32) + bias
+    w = jax.nn.softmax(logits, axis=-1)
+    out = einsum_f32("bkgs,bskh->bkgh", w.astype(v_cache.dtype), v_cache)
+    out = out.reshape(B, 1, H * hd).astype(x.dtype)
+    return matmul(out, p["wo"]), k_cache, v_cache
+
+
+# ---------------------------------------------------------------- MLP
+
+
+def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(ks[0], (D, F), dtype=dt),
+        "wg": dense_init(ks[1], (D, F), dtype=dt),
+        "wo": dense_init(ks[2], (F, D), dtype=dt),
+    }
+
+
+def mlp_apply(p, x):
+    return matmul(jax.nn.silu(matmul(x, p["wg"]).astype(jnp.float32))
+                  .astype(x.dtype) * matmul(x, p["wi"]), p["wo"])
+
+
+# ---------------------------------------------------------------- embeddings
+
+
+def embed_init(key, cfg: ModelConfig):
+    V, D = cfg.padded_vocab, cfg.d_model
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 2)
+    p = {"tok": dense_init(ks[0], (V, D), dtype=dt)}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(ks[1], (D, V), dtype=dt)
+    return p
+
+
+def embed_apply(p, tokens):
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def logits_apply(p, x):
+    w = p.get("head")
+    if w is None:
+        w = p["tok"].T
+    return einsum_f32("...d,dv->...v", x, w)

@@ -1,0 +1,83 @@
+"""Mixture-of-Experts FFN (mixtral-8x7b, granite-moe-1b-a400m).
+
+Top-k routing with grouped capacity-based dispatch (Switch/Mesh-TF style):
+tokens are split into fixed-size groups of M=512 so the one-hot dispatch
+tensor is [G, M, E, C] with C = M·k/E·cf — total memory ∝ T·k·cf
+regardless of E, and the group axis shards with the data axis.  Experts
+run as one batched einsum so the expert dim can be TP/EP-sharded.
+Overflowing tokens drop (capacity factor, standard practice); §Perf
+discusses the sort-based dropless alternative.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+GROUP = 512  # tokens per routing group
+
+
+def moe_init(key, cfg: ModelConfig):
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff
+    dt = L.dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "router": L.dense_init(ks[0], (D, E), dtype=jnp.float32),
+        "wi": L.dense_init(ks[1], (E, D, F), in_axis=1, dtype=dt),
+        "wg": L.dense_init(ks[2], (E, D, F), in_axis=1, dtype=dt),
+        "wo": L.dense_init(ks[3], (E, F, D), in_axis=1, dtype=dt),
+    }
+
+
+def moe_apply(p, x, cfg: ModelConfig):
+    """x [B,S,D] → [B,S,D]."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    M = min(GROUP, B * S)
+    T = B * S
+    assert T % M == 0, (B, S, M)
+    G = T // M
+    C = max(int(cfg.capacity_factor * M * k / E), 1)
+    C = min(C, M)
+
+    xg = x.reshape(G, M, D)
+    gates = jax.nn.softmax(
+        L.einsum_f32("gmd,de->gme", xg.astype(jnp.float32), p["router"]), -1)
+    topv, topi = jax.lax.top_k(gates, k)                   # [G,M,k]
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(topi, E, dtype=jnp.float32)    # [G,M,k,E]
+    # position of each (token, choice) within its expert's capacity —
+    # earlier tokens (and earlier choices) win slots
+    pos = jnp.cumsum(onehot.reshape(G, M * k, E), axis=1)
+    pos = pos.reshape(G, M, k, E) * onehot - 1.0           # [G,M,k,E]
+    # collapse the choice axis (an expert appears at most once per token)
+    pos_e = (pos * onehot).sum(2)                          # [G,M,E]
+    sel_e = onehot.sum(2)                                  # [G,M,E] ∈ {0,1}
+    gate_e = (topv[..., None] * onehot).sum(2)             # [G,M,E]
+    keep_e = (sel_e > 0) & (pos_e < C)
+    slot = jnp.where(keep_e, pos_e, C).astype(jnp.int32)
+    disp = jax.nn.one_hot(slot, C + 1, dtype=jnp.float32)[..., :C]
+    disp = disp * keep_e[..., None]                        # [G,M,E,C]
+
+    xin = jnp.einsum("gmec,gmd->gecd", disp.astype(x.dtype), xg).astype(x.dtype)
+    hg = L.einsum_f32("gecd,edf->gecf", xin, p["wg"])
+    hi = L.einsum_f32("gecd,edf->gecf", xin, p["wi"]).astype(x.dtype)
+    h = jax.nn.silu(hg).astype(x.dtype) * hi
+    out = L.einsum_f32("gecf,efd->gecd", h, p["wo"]).astype(x.dtype)
+    comb = disp * gate_e[..., None]                        # [G,M,E,C]
+    y = L.einsum_f32("gmec,gecd->gmd", comb.astype(x.dtype), out)
+    return y.reshape(B, S, D).astype(x.dtype)
+
+
+def aux_loss(p, x, cfg: ModelConfig):
+    """Load-balancing auxiliary loss (Switch): E·Σ_e f_e·P_e."""
+    gates = jax.nn.softmax(
+        jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"]), -1)
+    top1 = jnp.argmax(gates, -1)
+    f = jnp.mean(jax.nn.one_hot(top1, cfg.n_experts, dtype=jnp.float32),
+                 axis=(0, 1))
+    P = jnp.mean(gates, axis=(0, 1))
+    return cfg.n_experts * jnp.sum(f * P)

@@ -1,0 +1,292 @@
+"""RecurrentGemma / Griffin hybrid (arXiv:2402.19427).
+
+Repeating pattern (rec, rec, attn): two RG-LRU recurrent blocks followed by
+one local-attention block (window 2048, MQA).  The linear recurrence
+h_t = a_t·h_{t-1} + sqrt(1-a_t²)·(i_t⊙x_t) is associative, so the full
+sequence runs as ``lax.associative_scan`` (parallel prefix — TPU-idiomatic
+replacement for the sequential CUDA scan).  Gates use block-diagonal
+projections (16 blocks) as in the reference implementation.
+
+Layers are heterogeneous, so the stack is scanned as superblocks of the
+repeating unit plus an explicit tail (26 = 8×3 + 2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+N_GATE_BLOCKS = 16
+LRU_C = 8.0
+
+
+# ---------------------------------------------------------------- RG-LRU
+
+
+def _bdiag_init(key, w: int, dtype):
+    nb = N_GATE_BLOCKS
+    return (jax.random.normal(key, (nb, w // nb, w // nb), jnp.float32)
+            / jnp.sqrt(w // nb)).astype(dtype)
+
+
+def _bdiag_apply(wt, x):
+    nb = wt.shape[0]
+    B_, S, W = x.shape
+    xb = x.reshape(B_, S, nb, W // nb)
+    y = L.einsum_f32("bsnw,nwv->bsnv", xb, wt)
+    return y.reshape(B_, S, W)
+
+
+def rglru_init(key, cfg: ModelConfig):
+    W = cfg.lru_width or cfg.d_model
+    dt = L.dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    # Λ init so a ∈ (0.9, 0.999) at r=1 (paper init)
+    lam = jax.random.uniform(ks[2], (W,), jnp.float32, 0.9, 0.999)
+    a_param = jnp.log(jnp.expm1(-jnp.log(lam) / LRU_C))  # inv-softplus
+    return {
+        "wa": _bdiag_init(ks[0], W, dt),
+        "ba": jnp.zeros((W,), jnp.float32),
+        "wx": _bdiag_init(ks[1], W, dt),
+        "bx": jnp.zeros((W,), jnp.float32),
+        "a_param": a_param,
+    }
+
+
+def rglru_apply(p, x, h0=None):
+    """x [B,S,W] → (y [B,S,W], h_last [B,W]) via parallel prefix scan."""
+    r = jax.nn.sigmoid(_bdiag_apply(p["wa"], x) + p["ba"])
+    i = jax.nn.sigmoid(_bdiag_apply(p["wx"], x) + p["bx"])
+    log_a = -LRU_C * jax.nn.softplus(p["a_param"]) * r      # [B,S,W] fp32
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * i * x.astype(jnp.float32)
+
+    if h0 is not None:
+        gated = gated.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, u1 = c1
+        a2, u2 = c2
+        return a1 * a2, u1 * a2 + u2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_step(p, x_t, h):
+    """One decode step. x_t [B,W]; h [B,W]."""
+    xs = x_t[:, None, :]
+    r = jax.nn.sigmoid(_bdiag_apply(p["wa"], xs) + p["ba"])[:, 0]
+    i = jax.nn.sigmoid(_bdiag_apply(p["wx"], xs) + p["bx"])[:, 0]
+    log_a = -LRU_C * jax.nn.softplus(p["a_param"]) * r
+    a = jnp.exp(log_a)
+    h2 = a * h.astype(jnp.float32) + jnp.sqrt(
+        jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * i * x_t.astype(jnp.float32)
+    return h2.astype(x_t.dtype), h2.astype(x_t.dtype)
+
+
+# ---------------------------------------------------------------- blocks
+
+
+def rec_block_init(key, cfg: ModelConfig):
+    W = cfg.lru_width or cfg.d_model
+    D = cfg.d_model
+    dt = L.dtype_of(cfg)
+    ks = jax.random.split(key, 5)
+    return {
+        "ln1": L.rms_norm_init(D),
+        "wxin": L.dense_init(ks[0], (D, W), dtype=dt),
+        "wgate": L.dense_init(ks[1], (D, W), dtype=dt),
+        "conv_w": (jax.random.normal(ks[2], (4, W), jnp.float32) * 0.1
+                   ).astype(dt),
+        "conv_b": jnp.zeros((W,), jnp.float32),
+        "lru": rglru_init(ks[3], cfg),
+        "wout": L.dense_init(ks[4], (W, D), dtype=dt),
+        "ln2": L.rms_norm_init(D),
+        "mlp": L.mlp_init(jax.random.split(ks[4])[0], cfg),
+    }
+
+
+def _conv4(x, w, b):
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    return sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K)) \
+        + b.astype(x.dtype)
+
+
+def rec_block_apply(lp, cfg, x, h0=None, conv0=None, return_state=False):
+    h = L.rms_norm(lp["ln1"], x, cfg.norm_eps)
+    xin = L.matmul(h, lp["wxin"])
+    gate = jax.nn.gelu(L.matmul(h, lp["wgate"]).astype(jnp.float32)
+                       ).astype(x.dtype)
+    if conv0 is not None:  # decode: stitch conv history
+        xin_full = jnp.concatenate([conv0, xin], axis=1)
+        conv_out = _conv4(xin_full, lp["conv_w"], lp["conv_b"])
+        conv_out = conv_out[:, conv0.shape[1]:]
+        new_conv = xin_full[:, -3:]
+    else:
+        conv_out = _conv4(xin, lp["conv_w"], lp["conv_b"])
+        new_conv = xin[:, -3:]
+    y, h_last = rglru_apply(lp["lru"], conv_out, h0=h0)
+    x = x + L.matmul(y * gate, lp["wout"])
+    h2 = L.rms_norm(lp["ln2"], x, cfg.norm_eps)
+    x = x + L.mlp_apply(lp["mlp"], h2)
+    if return_state:
+        return x, (h_last, new_conv)
+    return x
+
+
+def attn_block_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.rms_norm_init(cfg.d_model),
+        "attn": L.attn_init(k1, cfg),
+        "ln2": L.rms_norm_init(cfg.d_model),
+        "mlp": L.mlp_init(k2, cfg),
+    }
+
+
+def attn_block_apply(lp, cfg, x, positions, return_kv=False):
+    h = L.rms_norm(lp["ln1"], x, cfg.norm_eps)
+    a, kv = L.attn_apply(lp["attn"], cfg, h, positions,
+                         window=cfg.local_window)
+    x = x + a
+    h = L.rms_norm(lp["ln2"], x, cfg.norm_eps)
+    x = x + L.mlp_apply(lp["mlp"], h)
+    if return_kv:
+        return x, kv
+    return x
+
+
+# ------------------------------------------------------------ full model
+
+
+def _layout(cfg: ModelConfig):
+    P = len(cfg.block_pattern)          # 3: (rec, rec, attn)
+    n_super = cfg.n_layers // P
+    tail = cfg.n_layers - n_super * P   # leading-pattern remainder
+    return n_super, tail
+
+
+def init(key, cfg: ModelConfig):
+    n_super, tail = _layout(cfg)
+    ke, ks_, kt = jax.random.split(key, 3)
+    skeys = jax.random.split(ks_, n_super)
+
+    def super_init(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "rec1": rec_block_init(k1, cfg),
+            "rec2": rec_block_init(k2, cfg),
+            "attn": attn_block_init(k3, cfg),
+        }
+
+    params = {
+        "embed": L.embed_init(ke, cfg),
+        "super": jax.vmap(super_init)(skeys),
+        "ln_f": L.rms_norm_init(cfg.d_model),
+    }
+    if tail:
+        tkeys = jax.random.split(kt, tail)
+        params["tail"] = jax.vmap(lambda k: rec_block_init(k, cfg))(tkeys)
+    return params
+
+
+def forward(params, cfg: ModelConfig, tokens, constrain=lambda t, k: t,
+            remat: bool = True):
+    B_, S = tokens.shape
+    x = L.embed_apply(params["embed"], tokens)
+    x = constrain(x, "act")
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B_, S))
+
+    def scan_fn(x, lp):
+        x = rec_block_apply(lp["rec1"], cfg, x)
+        x = rec_block_apply(lp["rec2"], cfg, x)
+        x = constrain(attn_block_apply(lp["attn"], cfg, x, positions), "act")
+        return x, ()
+
+    if remat:
+        scan_fn = jax.checkpoint(
+            scan_fn,
+            policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(scan_fn, x, params["super"])
+    if "tail" in params:
+        def tail_fn(x, lp):
+            return constrain(rec_block_apply(lp, cfg, x), "act"), ()
+        if remat:
+            tail_fn = jax.checkpoint(tail_fn)
+        x, _ = jax.lax.scan(tail_fn, x, params["tail"])
+    x = L.rms_norm(params["ln_f"], x, cfg.norm_eps)
+    return L.logits_apply(params["embed"], x)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
+               dtype=jnp.bfloat16):
+    n_super, tail = _layout(cfg)
+    W = cfg.lru_width or cfg.d_model
+    Wnd = min(cfg.local_window, seq_len)
+    c = {
+        "h1": jnp.zeros((n_super, batch, W), dtype),
+        "c1": jnp.zeros((n_super, batch, 3, W), dtype),
+        "h2": jnp.zeros((n_super, batch, W), dtype),
+        "c2": jnp.zeros((n_super, batch, 3, W), dtype),
+        "k": jnp.zeros((n_super, batch, Wnd, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((n_super, batch, Wnd, cfg.n_kv_heads, cfg.hd), dtype),
+    }
+    if tail:
+        c["th"] = jnp.zeros((tail, batch, W), dtype)
+        c["tc"] = jnp.zeros((tail, batch, 3, W), dtype)
+    return c
+
+
+def _rec_step(lp, cfg, x, h, conv):
+    """Single-token recurrent block. x [B,1,D]."""
+    hh = L.rms_norm(lp["ln1"], x, cfg.norm_eps)
+    xin = L.matmul(hh, lp["wxin"])[:, 0]
+    gate = jax.nn.gelu(L.matmul(hh, lp["wgate"]).astype(jnp.float32)
+                       )[:, 0].astype(x.dtype)
+    hist = jnp.concatenate([conv, xin[:, None]], axis=1)   # [B,4,W]
+    w = lp["conv_w"]
+    cv = jnp.sum(hist * w[None], axis=1) + lp["conv_b"].astype(x.dtype)
+    y, h2 = rglru_step(lp["lru"], cv, h)
+    x = x + L.matmul((y * gate)[:, None], lp["wout"])
+    hh = L.rms_norm(lp["ln2"], x, cfg.norm_eps)
+    x = x + L.mlp_apply(lp["mlp"], hh)
+    return x, h2, hist[:, 1:]
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos,
+                constrain=lambda t, k: t):
+    x = L.embed_apply(params["embed"], tokens)
+    x = constrain(x, "act")
+
+    def scan_fn(x, inp):
+        lp, h1, c1, h2, c2, kc, vc = inp
+        x, h1, c1 = _rec_step(lp["rec1"], cfg, x, h1, c1)
+        x, h2, c2 = _rec_step(lp["rec2"], cfg, x, h2, c2)
+        hh = L.rms_norm(lp["attn"]["ln1"], x, cfg.norm_eps)
+        a, kc, vc = L.attn_decode(lp["attn"]["attn"], cfg, hh, pos, kc, vc,
+                                  window=cfg.local_window)
+        x = x + a
+        hh = L.rms_norm(lp["attn"]["ln2"], x, cfg.norm_eps)
+        x = constrain(x + L.mlp_apply(lp["attn"]["mlp"], hh), "act")
+        return x, (h1, c1, h2, c2, kc, vc)
+
+    x, (h1, c1, h2, c2, kc, vc) = jax.lax.scan(
+        scan_fn, x, (params["super"], cache["h1"], cache["c1"],
+                     cache["h2"], cache["c2"], cache["k"], cache["v"]))
+    out = dict(cache, h1=h1, c1=c1, h2=h2, c2=c2, k=kc, v=vc)
+    if "tail" in params:
+        def tail_fn(x, inp):
+            lp, th, tc = inp
+            x, th, tc = _rec_step(lp, cfg, x, th, tc)
+            return x, (th, tc)
+        x, (th, tc) = jax.lax.scan(
+            tail_fn, x, (params["tail"], cache["th"], cache["tc"]))
+        out["th"], out["tc"] = th, tc
+    x = L.rms_norm(params["ln_f"], x, cfg.norm_eps)
+    return L.logits_apply(params["embed"], x), out

@@ -1,0 +1,253 @@
+"""Mamba2 (state-space duality / SSD) — arXiv:2405.21060.
+
+Chunked SSD forward: intra-chunk attention-like einsums + inter-chunk
+state recurrence via ``lax.associative_scan`` (parallel prefix on TPU —
+a deliberate TPU-idiomatic choice over the sequential CUDA chunk scan).
+Heads are kept factored as (groups g, repeats r) so B/C never expand to
+the full head dim.  A Pallas kernel for the intra-chunk block lives in
+``repro.kernels.ssd_scan`` with this as its oracle-producing reference.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def ssm_init(key, cfg: ModelConfig):
+    D = cfg.d_model
+    di = cfg.d_inner
+    G, N, H = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * G * N
+    dt = L.dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": L.dense_init(ks[0], (D, 2 * di + 2 * G * N + H), dtype=dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim),
+                                     jnp.float32) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "Dskip": jnp.ones((H,), jnp.float32),
+        "norm": L.rms_norm_init(di),
+        "out_proj": L.dense_init(ks[3], (di, D), dtype=dt),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv1d. x [B,S,C]; w [K,C]."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return y + b.astype(y.dtype)
+
+
+def ssd_chunked(x, dtv, A, B, C, chunk: int, state0=None):
+    """SSD over a full sequence.
+
+    x [b,s,g,r,p]; dtv [b,s,g,r]; A [g,r]; B,C [b,s,g,n].
+    Returns (y [b,s,g,r,p], final_state [b,g,r,n,p]).
+    """
+    b, s, g, r, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc, q = s // chunk, chunk
+    xb = x.reshape(b, nc, q, g, r, p)
+    dtb = dtv.reshape(b, nc, q, g, r).astype(jnp.float32)
+    Bb = B.reshape(b, nc, q, g, n)
+    Cb = C.reshape(b, nc, q, g, n)
+
+    dA = dtb * A                                  # [b,nc,q,g,r] (A<0)
+    cs = jnp.cumsum(dA, axis=2)                   # within-chunk cumsum
+    # intra-chunk ("diagonal block"): M_ij = C_i·B_j · exp(cs_i-cs_j) · dt_j
+    CB = L.einsum_f32("bcign,bcjgn->bcgij", Cb, Bb)
+    ci = cs[:, :, :, :, :, None]                  # [b,nc,q,g,r,1]
+    cj = jnp.moveaxis(cs, 2, -1)[:, :, None]      # [b,nc,1,g,r,q]
+    Ldec = jnp.exp(jnp.clip(ci - cj, -60.0, 0.0))
+    causal = jnp.tril(jnp.ones((q, q), jnp.bool_))
+    Ldec = Ldec * causal[None, None, :, None, None, :]
+    dtj = jnp.moveaxis(dtb, 2, -1)[:, :, None]    # [b,nc,1,g,r,q]
+    # CB [b,nc,g,i,j] → broadcast over r: [b,nc,i,g,1,j]
+    CBr = jnp.moveaxis(CB, 2, 3)[:, :, :, :, None, :]
+    # bf16 for the O(q²·heads) temporaries: halves the dominant HBM
+    # traffic of the intra-chunk block (§Perf C2); exp stays fp32.
+    W = (CBr.astype(x.dtype) * Ldec.astype(x.dtype)
+         * dtj.astype(x.dtype))                   # [b,nc,i,g,r,j]
+    xj = jnp.moveaxis(xb, 2, -1)                  # [b,nc,g,r,p,j]
+    y_intra = L.einsum_f32("bcigrj,bcgrpj->bcigrp", W, xj)
+
+    # chunk-local end states: S_c = Σ_j exp(cs_last - cs_j)·dt_j·B_j ⊗ x_j
+    decay_end = jnp.exp(jnp.clip(cs[:, :, -1:, :, :] - cs, -60.0, 0.0))
+    wght = (decay_end * dtb).astype(x.dtype)      # [b,nc,q,g,r]
+    S_loc = L.einsum_f32("bcqgn,bcqgr,bcqgrp->bcgrnp", Bb, wght, xb)
+    chunk_decay = jnp.exp(jnp.clip(jnp.sum(dA, axis=2), -60.0, 0.0))
+
+    # inter-chunk recurrence via parallel prefix (associative):
+    #   (d2, S2) ∘ (d1, S1) = (d1·d2, S1·d2 + S2)
+    def combine(a, bb):
+        d1, s1 = a
+        d2, s2 = bb
+        return d1 * d2, s1 * d2[..., None, None] + s2
+    if state0 is not None:
+        S_loc = S_loc.at[:, 0].add(
+            state0.astype(jnp.float32) * chunk_decay[:, 0][..., None, None])
+    dacc, Sacc = jax.lax.associative_scan(
+        combine, (chunk_decay, S_loc), axis=1)    # inclusive prefix
+    # states *entering* chunk c = Sacc[c-1] (zero for c=0)
+    S_prev = jnp.concatenate(
+        [jnp.zeros_like(Sacc[:, :1]), Sacc[:, :-1]], axis=1)
+    y_inter = L.einsum_f32("bcqgn,bcgrnp->bcqgrp", Cb,
+                         S_prev.astype(x.dtype))
+    y_inter = y_inter * jnp.exp(jnp.clip(cs, -60.0, 0.0))[..., None]
+    y = (y_intra + y_inter).reshape(b, s, g, r, p)
+    return y.astype(x.dtype), Sacc[:, -1].astype(x.dtype)
+
+
+def ssm_apply(p, cfg: ModelConfig, u, state=None, return_state=False):
+    """Full-sequence mamba2 mixer. u [B,S,D] → [B,S,D]."""
+    B_, S, D = u.shape
+    di, G, N, H = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    r = H // G
+    pdim = cfg.ssm_headdim
+    zxbcdt = L.matmul(u, p["in_proj"])
+    z, xBC, dtv = jnp.split(zxbcdt, [di, 2 * di + 2 * G * N], axis=-1)
+    xBC = jax.nn.silu(
+        _causal_conv(xBC, p["conv_w"], p["conv_b"]).astype(jnp.float32)
+    ).astype(u.dtype)
+    x, Bmat, Cmat = jnp.split(xBC, [di, di + G * N], axis=-1)
+    x = x.reshape(B_, S, G, r, pdim)
+    Bmat = Bmat.reshape(B_, S, G, N)
+    Cmat = Cmat.reshape(B_, S, G, N)
+    dtv = jax.nn.softplus(dtv.astype(jnp.float32) + p["dt_bias"])
+    dtv = dtv.reshape(B_, S, G, r)
+    A = -jnp.exp(p["A_log"]).reshape(G, r)
+    y, fstate = ssd_chunked(x, dtv, A, Bmat, Cmat, cfg.ssm_chunk,
+                            state0=state)
+    y = y + (p["Dskip"].reshape(G, r)[None, None, :, :, None]
+             * x.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(B_, S, di)
+    y = L.rms_norm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)
+                                              ).astype(y.dtype), cfg.norm_eps)
+    out = L.matmul(y, p["out_proj"])
+    if return_state:
+        return out, fstate
+    return out
+
+
+# ---------------------------------------------------------------- decode
+
+
+def ssm_init_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    G, r = cfg.ssm_groups, cfg.ssm_heads // cfg.ssm_groups
+    conv_dim = cfg.d_inner + 2 * G * cfg.ssm_state
+    return {
+        "state": jnp.zeros((batch, G, r, cfg.ssm_state, cfg.ssm_headdim),
+                           dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    }
+
+
+def ssm_decode_step(p, cfg: ModelConfig, cache, u):
+    """u [B,1,D] → (out [B,1,D], cache)."""
+    B_, _, D = u.shape
+    di, G, N, H = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    r = H // G
+    pdim = cfg.ssm_headdim
+    zxbcdt = L.matmul(u, p["in_proj"])[:, 0]
+    z, xBC, dtv = jnp.split(zxbcdt, [di, 2 * di + 2 * G * N], axis=-1)
+    # conv over (cached K-1 inputs, current)
+    hist = jnp.concatenate([cache["conv"], xBC[:, None, :]], axis=1)
+    w = p["conv_w"]
+    xBC_c = jnp.sum(hist * w[None], axis=1) + p["conv_b"].astype(u.dtype)
+    xBC_c = jax.nn.silu(xBC_c.astype(jnp.float32)).astype(u.dtype)
+    x, Bmat, Cmat = jnp.split(xBC_c, [di, di + G * N], axis=-1)
+    x = x.reshape(B_, G, r, pdim)
+    Bmat = Bmat.reshape(B_, G, N)
+    Cmat = Cmat.reshape(B_, G, N)
+    dtv = jax.nn.softplus(dtv.astype(jnp.float32) + p["dt_bias"])
+    dtv = dtv.reshape(B_, G, r)
+    A = -jnp.exp(p["A_log"]).reshape(G, r)
+    dA = jnp.exp(dtv * A)                                  # [B,G,r]
+    upd = jnp.einsum("bgn,bgr,bgrp->bgrnp", Bmat.astype(jnp.float32),
+                     dtv, x.astype(jnp.float32))
+    state = (cache["state"].astype(jnp.float32)
+             * dA[..., None, None] + upd)
+    y = jnp.einsum("bgn,bgrnp->bgrp", Cmat.astype(jnp.float32), state)
+    y = y + p["Dskip"].reshape(G, r)[None, :, :, None] * x.astype(jnp.float32)
+    y = y.reshape(B_, di).astype(u.dtype)
+    y = L.rms_norm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)
+                                              ).astype(u.dtype), cfg.norm_eps)
+    out = L.matmul(y[:, None, :], p["out_proj"])
+    cache = {
+        "state": state.astype(cache["state"].dtype),
+        "conv": hist[:, 1:],
+    }
+    return out, cache
+
+
+# ---------------------------------------------------------------- blocks
+
+
+def block_init(key, cfg: ModelConfig):
+    return {"ln": L.rms_norm_init(cfg.d_model), "mixer": ssm_init(key, cfg)}
+
+
+def init(key, cfg: ModelConfig):
+    ke, kl = jax.random.split(key)
+    lkeys = jax.random.split(kl, cfg.n_layers)
+    return {
+        "embed": L.embed_init(ke, cfg),
+        "layers": jax.vmap(lambda k: block_init(k, cfg))(lkeys),
+        "ln_f": L.rms_norm_init(cfg.d_model),
+    }
+
+
+def forward(params, cfg: ModelConfig, tokens, constrain=lambda t, k: t,
+            remat: bool = True):
+    x = L.embed_apply(params["embed"], tokens)
+    x = constrain(x, "act")
+
+    def scan_fn(x, lp):
+        h = L.rms_norm(lp["ln"], x, cfg.norm_eps)
+        x = constrain(x + ssm_apply(lp["mixer"], cfg, h), "act")
+        return x, ()
+
+    if remat:
+        scan_fn = jax.checkpoint(
+            scan_fn,
+            policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(scan_fn, x, params["layers"])
+    x = L.rms_norm(params["ln_f"], x, cfg.norm_eps)
+    return L.logits_apply(params["embed"], x)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
+               dtype=jnp.bfloat16):
+    del seq_len  # O(1) state — the whole point of the SSM family
+    c = ssm_init_cache(cfg, batch, dtype)
+    return {
+        "state": jnp.zeros((cfg.n_layers,) + c["state"].shape, dtype),
+        "conv": jnp.zeros((cfg.n_layers,) + c["conv"].shape, dtype),
+    }
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos,
+                constrain=lambda t, k: t):
+    del pos
+    x = L.embed_apply(params["embed"], tokens)
+    x = constrain(x, "act")
+
+    def scan_fn(x, inp):
+        lp, st, cv = inp
+        h = L.rms_norm(lp["ln"], x, cfg.norm_eps)
+        out, c2 = ssm_decode_step(lp["mixer"], cfg, {"state": st, "conv": cv},
+                                  h)
+        x = constrain(x + out, "act")
+        return x, (c2["state"], c2["conv"])
+
+    x, (sts, cvs) = jax.lax.scan(
+        scan_fn, x, (params["layers"], cache["state"], cache["conv"]))
+    x = L.rms_norm(params["ln_f"], x, cfg.norm_eps)
+    return L.logits_apply(params["embed"], x), {"state": sts, "conv": cvs}

@@ -1,0 +1,147 @@
+"""Decoder-only transformer (dense family): scan-over-layers, remat-able.
+
+Covers qwen3-32b (qk_norm), phi3-medium-14b, granite-3-2b, yi-6b, the
+mixtral attention backbone (SWA window) and qwen2-vl (M-RoPE via
+positions3).  MoE swaps the FFN through `ffn_apply` (repro.models.moe).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def block_init(key, cfg: ModelConfig, ffn_init: Callable):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.rms_norm_init(cfg.d_model),
+        "attn": L.attn_init(k1, cfg),
+        "ln2": L.rms_norm_init(cfg.d_model),
+        "ffn": ffn_init(k2, cfg),
+    }
+
+
+def init(key, cfg: ModelConfig, ffn_init: Callable = L.mlp_init):
+    ke, kl, kf = jax.random.split(key, 3)
+    lkeys = jax.random.split(kl, cfg.n_layers)
+    stacked = jax.vmap(lambda k: block_init(k, cfg, ffn_init))(lkeys)
+    return {
+        "embed": L.embed_init(ke, cfg),
+        "layers": stacked,
+        "ln_f": L.rms_norm_init(cfg.d_model),
+    }
+
+
+def block_apply(lp, cfg: ModelConfig, ffn_apply: Callable, x, positions,
+                positions3=None, constrain=lambda t, kind: t):
+    h = L.rms_norm(lp["ln1"], x, cfg.norm_eps)
+    a, _ = L.attn_apply(lp["attn"], cfg, h, positions,
+                        window=cfg.window, positions3=positions3)
+    x = constrain(x + a, "act")
+    h = L.rms_norm(lp["ln2"], x, cfg.norm_eps)
+    x = constrain(x + ffn_apply(lp["ffn"], h), "act")
+    return x
+
+
+def forward(params, cfg: ModelConfig, tokens, *, positions=None,
+            positions3=None, input_embeds=None,
+            ffn_apply: Callable = lambda p, x: L.mlp_apply(p, x),
+            constrain=lambda t, kind: t, remat: bool = True):
+    """Full-sequence forward → logits [B,S,V] (fp32).
+
+    `input_embeds` [B,P,D] (vlm/audio stubs) override the first P embedding
+    rows.  `constrain` applies sharding constraints (set by the launcher).
+    """
+    B, S = tokens.shape
+    x = L.embed_apply(params["embed"], tokens)
+    if input_embeds is not None:
+        P = input_embeds.shape[1]
+        x = jnp.concatenate([input_embeds.astype(x.dtype), x[:, P:]], axis=1)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x = constrain(x, "act")
+
+    body = partial(block_apply, cfg=cfg, ffn_apply=ffn_apply,
+                   positions=positions, positions3=positions3,
+                   constrain=constrain)
+
+    def scan_fn(x, lp):
+        return body(lp, x=x), ()
+
+    if remat:
+        scan_fn = jax.checkpoint(
+            scan_fn, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(scan_fn, x, params["layers"])
+    x = L.rms_norm(params["ln_f"], x, cfg.norm_eps)
+    return L.logits_apply(params["embed"], x)
+
+
+# ---------------------------------------------------------------- decode
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
+               dtype=jnp.bfloat16):
+    """KV cache [L,B,S,K,hd] ×2. SWA archs keep a ring of `window` slots."""
+    S = min(seq_len, cfg.window) if cfg.window else seq_len
+    shape = (cfg.n_layers, batch, S, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, positions3=None,
+            input_embeds=None, ffn_apply=lambda p, x: L.mlp_apply(p, x),
+            constrain=lambda t, kind: t):
+    """Forward pass that also materializes the KV cache (inference prefill).
+    Returns (logits, cache)."""
+    B, S = tokens.shape
+    x = L.embed_apply(params["embed"], tokens)
+    if input_embeds is not None:
+        P = input_embeds.shape[1]
+        x = jnp.concatenate([input_embeds.astype(x.dtype), x[:, P:]], axis=1)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x = constrain(x, "act")
+
+    def scan_fn(x, lp):
+        h = L.rms_norm(lp["ln1"], x, cfg.norm_eps)
+        a, (k, v) = L.attn_apply(lp["attn"], cfg, h, positions,
+                                 window=cfg.window, positions3=positions3)
+        x = constrain(x + a, "act")
+        h = L.rms_norm(lp["ln2"], x, cfg.norm_eps)
+        x = constrain(x + ffn_apply(lp["ffn"], h), "act")
+        if cfg.window and cfg.window < S:
+            k, v = k[:, -cfg.window:], v[:, -cfg.window:]
+        return x, (constrain(k, "kv"), constrain(v, "kv"))
+
+    x, (ks, vs) = jax.lax.scan(scan_fn, x, params["layers"])
+    x = L.rms_norm(params["ln_f"], x, cfg.norm_eps)
+    logits = L.logits_apply(params["embed"], x[:, -1:])
+    return logits, {"k": ks, "v": vs}
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *,
+                positions3=None,
+                ffn_apply=lambda p, x: L.mlp_apply(p, x),
+                constrain=lambda t, kind: t):
+    """One decode step. tokens [B,1]; pos [B]. Returns (logits, cache)."""
+    x = L.embed_apply(params["embed"], tokens)
+    x = constrain(x, "act")
+
+    def scan_fn(x, inp):
+        lp, kc, vc = inp
+        h = L.rms_norm(lp["ln1"], x, cfg.norm_eps)
+        a, kc, vc = L.attn_decode(lp["attn"], cfg, h, pos, kc, vc,
+                                  window=cfg.window, positions3=positions3)
+        x = constrain(x + a, "act")
+        h = L.rms_norm(lp["ln2"], x, cfg.norm_eps)
+        x = constrain(x + ffn_apply(lp["ffn"], h), "act")
+        return x, (constrain(kc, "kv"), constrain(vc, "kv"))
+
+    x, (ks, vs) = jax.lax.scan(scan_fn, x, (params["layers"],
+                                            cache["k"], cache["v"]))
+    x = L.rms_norm(params["ln_f"], x, cfg.norm_eps)
+    logits = L.logits_apply(params["embed"], x)
+    return logits, {"k": ks, "v": vs}

@@ -1,0 +1,106 @@
+"""Paged-KV block tables — the framework's page-table analogue.
+
+Logical KV block (request r, block index b) → physical page in the HBM KV
+pool, resolved through a 2-level radix table:
+
+    directory[r, b >> FANOUT_BITS] → leaf page id
+    leaf[leaf_page, b & FANOUT-1]  → physical KV page
+
+Two chained HBM gathers per translation — the "page table walk" of the
+serving stack (a 500K-token request has 4096 leaf entries; the directory
+keeps resize/defrag O(1) like the OS PT it mirrors).  The Victima layer
+(``translation_cache``) shortens this chain for hot, costly translations.
+
+Pure-functional: tables are int32 arrays, updates return new arrays.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+FANOUT_BITS = 6
+FANOUT = 1 << FANOUT_BITS          # 64 leaf entries per directory slot
+TOKENS_PER_PAGE = 128
+FREE = jnp.int32(-1)
+
+
+class BlockTables(NamedTuple):
+    directory: jax.Array   # int32 [R, max_dir]    → leaf row id (or FREE)
+    leaves: jax.Array      # int32 [n_leaf_rows, FANOUT] → phys page (FREE)
+    leaf_free: jax.Array   # int32 [n_leaf_rows]   1 = row free
+    # walk-cost counters for the PTW-CP analogue (per leaf row)
+    walk_freq: jax.Array   # uint8 [n_leaf_rows]
+    walk_cost: jax.Array   # uint8 [n_leaf_rows]
+
+
+def make(n_requests: int, max_blocks_per_req: int, n_leaf_rows: int
+         ) -> BlockTables:
+    max_dir = (max_blocks_per_req + FANOUT - 1) // FANOUT
+    return BlockTables(
+        directory=jnp.full((n_requests, max_dir), FREE, jnp.int32),
+        leaves=jnp.full((n_leaf_rows, FANOUT), FREE, jnp.int32),
+        leaf_free=jnp.ones((n_leaf_rows,), jnp.int32),
+        walk_freq=jnp.zeros((n_leaf_rows,), jnp.uint8),
+        walk_cost=jnp.zeros((n_leaf_rows,), jnp.uint8),
+    )
+
+
+def walk(bt: BlockTables, req: jax.Array, block: jax.Array):
+    """Radix walk: 2 dependent gathers. Returns (phys_page, hops, leaf_row).
+    hops = 2 normally; 1 if the directory slot is dead (fault path)."""
+    dslot = block >> FANOUT_BITS
+    leaf_row = bt.directory[req, dslot]
+    ok = leaf_row >= 0
+    phys = jnp.where(ok, bt.leaves[jnp.maximum(leaf_row, 0),
+                                   block & (FANOUT - 1)], FREE)
+    hops = jnp.where(ok, 2, 1)
+    return phys, hops, jnp.maximum(leaf_row, 0)
+
+
+def walk_batch(bt: BlockTables, reqs: jax.Array, blocks: jax.Array):
+    return jax.vmap(lambda r, b: walk(bt, r, b))(reqs, blocks)
+
+
+def map_block(bt: BlockTables, req, block, phys_page) -> BlockTables:
+    """Map (req, block) → phys_page, allocating a leaf row if needed."""
+    dslot = block >> FANOUT_BITS
+    leaf_row = bt.directory[req, dslot]
+    need_alloc = leaf_row < 0
+    fresh = jnp.argmax(bt.leaf_free)            # first free row
+    row = jnp.where(need_alloc, fresh, leaf_row)
+    directory = bt.directory.at[req, dslot].set(row)
+    leaf_free = bt.leaf_free.at[fresh].set(
+        jnp.where(need_alloc, 0, bt.leaf_free[fresh]))
+    leaves = bt.leaves.at[row, block & (FANOUT - 1)].set(phys_page)
+    return bt._replace(directory=directory, leaves=leaves,
+                       leaf_free=leaf_free)
+
+
+def unmap_request(bt: BlockTables, req) -> BlockTables:
+    """Release a finished request (the 'TLB shootdown' trigger).
+
+    Invalid directory slots clamp to row 0, so all scatters must be
+    order-independent (max/min), never plain writes."""
+    rows = bt.directory[req]
+    valid = rows >= 0
+    rc = jnp.maximum(rows, 0)
+    leaf_free = bt.leaf_free.at[rc].max(valid.astype(jnp.int32))
+    big = jnp.int32(1 << 30)
+    leaves = bt.leaves.at[rc].min(
+        jnp.where(valid[:, None], FREE, big))
+    return bt._replace(
+        directory=bt.directory.at[req].set(FREE),
+        leaves=leaves, leaf_free=leaf_free)
+
+
+def note_walk(bt: BlockTables, leaf_row, had_fault) -> BlockTables:
+    """PTW-CP counter update (3-bit freq, 4-bit cost, saturating —
+    identical bit-budget to the paper's PTE-embedded counters)."""
+    f = jnp.minimum(bt.walk_freq[leaf_row].astype(jnp.int32) + 1, 7)
+    c = jnp.minimum(bt.walk_cost[leaf_row].astype(jnp.int32)
+                    + jnp.asarray(had_fault).astype(jnp.int32), 15)
+    return bt._replace(
+        walk_freq=bt.walk_freq.at[leaf_row].set(f.astype(jnp.uint8)),
+        walk_cost=bt.walk_cost.at[leaf_row].set(c.astype(jnp.uint8)))

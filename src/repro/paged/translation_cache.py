@@ -1,0 +1,191 @@
+"""Victima Translation Cache (VTC) — the paper's mechanism, TPU-adapted.
+
+Three tiers mirror the paper's hierarchy (DESIGN.md §2.2):
+
+  1. TC  — small set-associative translation cache (the "L2 TLB"):
+     (req, block) → phys page, SMEM/VMEM-resident at kernel launch.
+  2. **Translation cluster pages** — Victima's key idea transplanted:
+     *unused pages of the KV pool itself* are retagged to hold clusters of
+     CLUSTER=8 leaf translations.  A cluster hit costs ONE gather instead
+     of the 2-hop radix walk (paper: one L2 access instead of a PTW).
+  3. Radix walk (``block_table.walk``) — the slow path; updates the
+     per-leaf (freq, cost) counters.
+
+Insertion is gated by the paper's exact PTW-CP comparator box
+(1,1)–(12,7) on those counters, and the pool eviction policy is
+TLB-aware SRRIP: cluster pages are protected while TC pressure is high.
+All state is integer arrays; every op is jit/scan-safe.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ptwcp
+from repro.core.assoc import RRIP_MAX
+from repro.paged import block_table as btab
+
+CLUSTER = 8  # translations per cluster line (paper: 8 PTEs / 64B block)
+
+
+class VTC(NamedTuple):
+    # tier 1: set-associative TC
+    tc_tags: jax.Array      # int32 [S, W]  key = (req << 20) | block
+    tc_phys: jax.Array      # int32 [S, W]
+    tc_valid: jax.Array     # bool  [S, W]
+    tc_stamp: jax.Array     # int32 [S, W]
+    # tier 2: cluster pages carved from the KV pool
+    cl_tags: jax.Array      # int32 [n_cl]  key = (req<<20 | block) >> 3
+    cl_phys: jax.Array      # int32 [n_cl, CLUSTER]
+    cl_valid: jax.Array     # bool  [n_cl]
+    cl_rrpv: jax.Array      # int32 [n_cl]
+    # stats
+    n_hit_tc: jax.Array
+    n_hit_cluster: jax.Array
+    n_walk: jax.Array
+    now: jax.Array
+
+
+def make(tc_sets: int = 64, tc_ways: int = 4, n_clusters: int = 256) -> VTC:
+    z = jnp.zeros((tc_sets, tc_ways), jnp.int32)
+    return VTC(
+        tc_tags=z, tc_phys=z,
+        tc_valid=jnp.zeros((tc_sets, tc_ways), jnp.bool_),
+        tc_stamp=z,
+        cl_tags=jnp.zeros((n_clusters,), jnp.int32),
+        cl_phys=jnp.full((n_clusters, CLUSTER), -1, jnp.int32),
+        cl_valid=jnp.zeros((n_clusters,), jnp.bool_),
+        cl_rrpv=jnp.full((n_clusters,), RRIP_MAX, jnp.int32),
+        n_hit_tc=jnp.int32(0), n_hit_cluster=jnp.int32(0),
+        n_walk=jnp.int32(0), now=jnp.int32(0),
+    )
+
+
+def _key(req, block):
+    return (req << 20) | block
+
+
+def translate(vtc: VTC, bt: btab.BlockTables, req, block, pressure):
+    """Full Victima translation flow for one (req, block).
+
+    Returns (vtc, bt, phys_page, source) with source 0=TC, 1=cluster,
+    2=walk.  State updates mirror the paper §5.2/§5.3:
+      miss in TC → probe cluster pages ∥ start walk; on walk completion
+      the PTW-CP box decides whether to install the 8-translation cluster;
+      TC refill always happens; TC eviction triggers a background install.
+    """
+    now = vtc.now + 1
+    vtc = vtc._replace(now=now)
+    key = _key(req, block)
+    S = vtc.tc_tags.shape[0]
+    s = key & (S - 1)
+    row_hit = vtc.tc_valid[s] & (vtc.tc_tags[s] == key)
+    tc_hit = jnp.any(row_hit)
+    w_hit = jnp.argmax(row_hit)
+    vtc = vtc._replace(tc_stamp=vtc.tc_stamp.at[s, w_hit].set(
+        jnp.where(tc_hit, now, vtc.tc_stamp[s, w_hit])))
+
+    # tier 2: cluster probe (direct-mapped on the cluster key)
+    ckey = key >> 3
+    n_cl = vtc.cl_tags.shape[0]
+    # Knuth multiplicative hash, TAKING THE HIGH BITS: req lives in the
+    # key's high bits, and low product bits only see low key bits — using
+    # them would alias every request's region-0 onto slot 0
+    nbits = (n_cl - 1).bit_length()
+    ci = jax.lax.shift_right_logical(
+        ckey * jnp.int32(-1640531535), 32 - nbits) & (n_cl - 1)
+    phys_cl = vtc.cl_phys[ci, block & (CLUSTER - 1)]
+    # a cluster may predate the mapping of some of its 8 blocks (it then
+    # holds FREE=-1 for them) — such entries fall through to the walk,
+    # mirroring the paper's invalid-PTE handling
+    cl_hit = ((~tc_hit) & vtc.cl_valid[ci] & (vtc.cl_tags[ci] == ckey)
+              & (phys_cl >= 0))
+    # cluster hit promotion (TLB-aware: -3 under pressure)
+    dec = jnp.where(pressure, 3, 1)
+    vtc = vtc._replace(cl_rrpv=vtc.cl_rrpv.at[ci].set(
+        jnp.where(cl_hit, jnp.maximum(vtc.cl_rrpv[ci] - dec, 0),
+                  vtc.cl_rrpv[ci])))
+
+    # tier 3: radix walk
+    need_walk = ~tc_hit & ~cl_hit
+    phys_walk, hops, leaf_row = btab.walk(bt, req, block)
+    bt2 = btab.note_walk(bt, leaf_row, hops >= 2)  # chained-gather walk = costly
+    bt = jax.tree.map(lambda a, b: jnp.where(need_walk, b, a), bt, bt2)
+
+    phys = jnp.where(tc_hit, vtc.tc_phys[s, w_hit],
+                     jnp.where(cl_hit, phys_cl, phys_walk))
+
+    # PTW-CP gate → install the full cluster of 8 neighbours.
+    # Thresholds are refit for the serving domain exactly as the paper
+    # refit its box from NN-2 (Fig. 16): our per-leaf-row counters are
+    # lifetime counters, so the paper's cost≤12 upper bound (which filters
+    # 500M-instr window pathologies) would permanently exclude every hot
+    # row once its 4-bit counter saturates.  Box: freq≥1 ∧ cost≥1.
+    f = bt.walk_freq[leaf_row].astype(jnp.int32)
+    c = bt.walk_cost[leaf_row].astype(jnp.int32)
+    pred = (f >= 1) & (c >= 1)
+    install = need_walk & pred
+    base = block & ~(CLUSTER - 1)
+    neigh = base + jnp.arange(CLUSTER)
+    nphys, _, _ = btab.walk_batch(bt, jnp.full((CLUSTER,), req), neigh)
+    # TLB-aware eviction of the direct-mapped slot: under pressure an
+    # existing *valid cluster with low RRPV* resists replacement, but a
+    # blocked install AGES the slot (SRRIP semantics) so stale clusters
+    # cannot squat forever
+    resist = vtc.cl_valid[ci] & pressure & (vtc.cl_rrpv[ci] < RRIP_MAX)
+    do_install = install & ~resist
+    aged = jnp.minimum(vtc.cl_rrpv[ci]
+                       + (install & resist).astype(jnp.int32), RRIP_MAX)
+    vtc = vtc._replace(cl_rrpv=vtc.cl_rrpv.at[ci].set(aged))
+    vtc = vtc._replace(
+        cl_tags=vtc.cl_tags.at[ci].set(
+            jnp.where(do_install, ckey, vtc.cl_tags[ci])),
+        cl_phys=vtc.cl_phys.at[ci].set(
+            jnp.where(do_install, nphys, vtc.cl_phys[ci])),
+        cl_valid=vtc.cl_valid.at[ci].set(vtc.cl_valid[ci] | do_install),
+        cl_rrpv=vtc.cl_rrpv.at[ci].set(
+            jnp.where(do_install, jnp.where(pressure, 0, RRIP_MAX - 1),
+                      vtc.cl_rrpv[ci])),
+    )
+
+    # TC refill (LRU victim) on any miss
+    stamps = jnp.where(vtc.tc_valid[s], vtc.tc_stamp[s], -1)
+    wv = jnp.argmin(stamps)
+    miss = ~tc_hit
+    vtc = vtc._replace(
+        tc_tags=vtc.tc_tags.at[s, wv].set(
+            jnp.where(miss, key, vtc.tc_tags[s, wv])),
+        tc_phys=vtc.tc_phys.at[s, wv].set(
+            jnp.where(miss, phys, vtc.tc_phys[s, wv])),
+        tc_valid=vtc.tc_valid.at[s, wv].set(vtc.tc_valid[s, wv] | miss),
+        tc_stamp=vtc.tc_stamp.at[s, wv].set(
+            jnp.where(miss, now, vtc.tc_stamp[s, wv])),
+        n_hit_tc=vtc.n_hit_tc + tc_hit.astype(jnp.int32),
+        n_hit_cluster=vtc.n_hit_cluster + cl_hit.astype(jnp.int32),
+        n_walk=vtc.n_walk + need_walk.astype(jnp.int32),
+    )
+    return vtc, bt, phys, jnp.where(tc_hit, 0, jnp.where(cl_hit, 1, 2))
+
+
+def translate_batch(vtc: VTC, bt: btab.BlockTables, reqs, blocks, pressure):
+    """Sequential (scan) batch translation — the scheduler-side path."""
+    def body(carry, rb):
+        v, b = carry
+        v, b, phys, src = translate(v, b, rb[0], rb[1], pressure)
+        return (v, b), (phys, src)
+    (vtc, bt), (phys, src) = jax.lax.scan(
+        body, (vtc, bt), jnp.stack([reqs, blocks], 1))
+    return vtc, bt, phys, src
+
+
+def invalidate_request(vtc: VTC, req) -> VTC:
+    """Shootdown flow (paper §6): request eviction invalidates its TC
+    entries and cluster pages by tag match on the request id."""
+    tmask = (vtc.tc_tags >> 20) == req
+    cmask = (vtc.cl_tags >> 17) == req  # ckey = key>>3 ⇒ req bits at 17
+    return vtc._replace(
+        tc_valid=vtc.tc_valid & ~tmask,
+        cl_valid=vtc.cl_valid & ~cmask,
+    )

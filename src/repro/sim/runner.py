@@ -1,0 +1,155 @@
+"""Simulation driver: evaluated-system presets (Table 3) + cached runs."""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import pickle
+
+import jax
+
+# persistent XLA compile cache: sim step graphs take minutes to compile
+# on this 1-core container; compile once across processes.
+jax.config.update("jax_compilation_cache_dir",
+                  os.environ.get("JAX_CACHE", "/root/repo/.jax_cache"))
+jax.config.update("jax_persistent_cache_min_compile_time_secs", 5)
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mmu import SimConfig, simulate, simulate_batch
+from repro.sim import trace_gen
+
+CACHE_DIR = os.environ.get("REPRO_SIM_CACHE", "/root/repo/.sim_cache")
+
+
+def system_config(system: str) -> SimConfig:
+    """Named presets for every evaluated system (paper Table 3)."""
+    base = SimConfig()
+    presets = {
+        # --- native
+        "radix": base,
+        "victima": dataclasses.replace(base, victima=True),
+        "victima_agnostic": dataclasses.replace(
+            base, victima=True, tlb_aware=False),
+        "victima_noptwcp": dataclasses.replace(
+            base, victima=True, use_ptwcp=False),
+        "pom": dataclasses.replace(base, pom=True),
+        # optimistic large L2 TLBs (12-cycle regardless of size)
+        "l2tlb_3k": dataclasses.replace(base, l2tlb_sets=256),
+        "l2tlb_8k": dataclasses.replace(base, l2tlb_sets=512, l2tlb_ways=16),
+        "l2tlb_16k": dataclasses.replace(base, l2tlb_sets=1024, l2tlb_ways=16),
+        "l2tlb_32k": dataclasses.replace(base, l2tlb_sets=2048, l2tlb_ways=16),
+        "l2tlb_64k": dataclasses.replace(base, l2tlb_sets=4096, l2tlb_ways=16),
+        "l2tlb_128k": dataclasses.replace(base, l2tlb_sets=8192, l2tlb_ways=16),
+        # realistic latencies from CACTI 7.0 (paper §3.1: 1.4× per 2×)
+        "l2tlb_8k_real": dataclasses.replace(
+            base, l2tlb_sets=512, l2tlb_ways=16, l2tlb_lat=17),
+        "l2tlb_16k_real": dataclasses.replace(
+            base, l2tlb_sets=1024, l2tlb_ways=16, l2tlb_lat=23),
+        "l2tlb_32k_real": dataclasses.replace(
+            base, l2tlb_sets=2048, l2tlb_ways=16, l2tlb_lat=30),
+        "l2tlb_64k_real": dataclasses.replace(
+            base, l2tlb_sets=4096, l2tlb_ways=16, l2tlb_lat=39),
+        # hardware L3 TLB (64K entries) at various latencies
+        "l3tlb_64k_15": dataclasses.replace(base, l3tlb_sets=4096, l3tlb_lat=15),
+        "l3tlb_64k_24": dataclasses.replace(base, l3tlb_sets=4096, l3tlb_lat=24),
+        "l3tlb_64k_39": dataclasses.replace(base, l3tlb_sets=4096, l3tlb_lat=39),
+        # --- L2 cache size sensitivity (Fig. 25): 1/4/8 MB
+        "victima_l2_1m": dataclasses.replace(base, victima=True,
+                                             l2_sets=1024),
+        "victima_l2_4m": dataclasses.replace(base, victima=True,
+                                             l2_sets=4096),
+        "victima_l2_8m": dataclasses.replace(base, victima=True,
+                                             l2_sets=8192),
+        "radix_l2_1m": dataclasses.replace(base, l2_sets=1024),
+        "radix_l2_4m": dataclasses.replace(base, l2_sets=4096),
+        "radix_l2_8m": dataclasses.replace(base, l2_sets=8192),
+        # --- Table 2 feature collection
+        "radix_collect": dataclasses.replace(base, collect=True),
+        # --- virtualized
+        "np": dataclasses.replace(base, virt=True),
+        "victima_virt": dataclasses.replace(base, virt=True, victima=True),
+        "pom_virt": dataclasses.replace(base, virt=True, pom=True),
+        "isp": dataclasses.replace(base, virt=True, ideal_shadow=True),
+    }
+    return presets[system]
+
+
+def _key(system: str, workload: str, n: int, seed: int,
+         overrides: dict | None) -> str:
+    blob = json.dumps([system, workload, n, seed, overrides or {}],
+                      sort_keys=True)
+    return hashlib.sha1(blob.encode()).hexdigest()[:16]
+
+
+def _path(system, workload, n, seed, overrides):
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    key = _key(system, workload, n, seed, overrides)
+    return os.path.join(CACHE_DIR, key + ".pkl")
+
+
+def run_batch(system: str, workloads=None, n: int = 150_000, seed: int = 0,
+              overrides: dict | None = None, cache: bool = True):
+    """Simulate one system over ALL workloads in a single vmapped scan.
+
+    Fills the per-(system, workload) disk cache; returns dict
+    workload → (stats, extras, spec).
+    """
+    workloads = workloads or trace_gen.all_workloads()
+    missing = [w for w in workloads
+               if not (cache and os.path.exists(
+                   _path(system, w, n, seed, overrides)))]
+    out = {}
+    if missing:
+        gens = [trace_gen.generate(w, n=n, seed=seed) for w in missing]
+        cfg = system_config(system)
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        stacked = {
+            k: jnp.asarray(np.stack([g["trace"][k] for g in gens], axis=1))
+            for k in gens[0]["trace"]
+        }
+        stacked["ipa"] = jnp.asarray(
+            np.broadcast_to(
+                np.asarray([g["spec"].ipa for g in gens], np.float32),
+                (n, len(gens))))
+        per, extras = simulate_batch(cfg, stacked)
+        for w, g, st, ex in zip(missing, gens, per, extras):
+            st = type(st)(*[np.asarray(x) for x in st])
+            result = (st, ex, g["spec"])
+            with open(_path(system, w, n, seed, overrides), "wb") as f:
+                pickle.dump(result, f)
+    for w in workloads:
+        with open(_path(system, w, n, seed, overrides), "rb") as f:
+            out[w] = pickle.load(f)
+    return out
+
+
+def run(system: str, workload: str, n: int = 150_000, seed: int = 0,
+        overrides: dict | None = None, cache: bool = True):
+    """Simulate one (system, workload). Returns (stats, extras, spec).
+
+    Results are cached on disk — the benchmark harness reruns cheaply.
+    """
+    path = _path(system, workload, n, seed, overrides)
+    if cache and os.path.exists(path):
+        with open(path, "rb") as f:
+            return pickle.load(f)
+
+    gen = trace_gen.generate(workload, n=n, seed=seed)
+    cfg = system_config(system)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    cfg = dataclasses.replace(cfg, ipa=gen["spec"].ipa)
+    trace = {k: jnp.asarray(v) for k, v in gen["trace"].items()}
+    trace["ipa"] = jnp.full((len(gen["trace"]["vpn"]),), gen["spec"].ipa,
+                            jnp.float32)
+    stats, extras = simulate(cfg, trace)
+    stats = type(stats)(*[np.asarray(x) for x in stats])
+    result = (stats, extras, gen["spec"])
+    if cache:
+        with open(path, "wb") as f:
+            pickle.dump(result, f)
+    return result

