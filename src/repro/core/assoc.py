@@ -94,6 +94,46 @@ def insert_lru(a: Assoc, key: jax.Array, now: jax.Array, enable=True):
     return new, ev_tag, ev_valid & en
 
 
+# ------------------------------------------------- dynamic-size LRU views
+#
+# A structure allocated at its ladder-maximum shape can emulate any
+# smaller power-of-two geometry with *traced* size parameters: the set
+# index is masked with `set_mask` (= live_sets - 1) and victim selection
+# is restricted to ways below `n_ways`.  Because inserts never touch
+# ways >= n_ways, lookups and LRU choices are bit-identical to a
+# statically allocated (live_sets, n_ways) structure — which is what
+# lets one compiled step be vmapped across a whole size ladder.
+
+
+def lookup_dyn(a: Assoc, key: jax.Array, set_mask: jax.Array,
+               n_ways: jax.Array):
+    """`lookup` against a dynamically sized view of `a`."""
+    s = key & set_mask
+    way_ok = jnp.arange(a.n_ways) < n_ways
+    hits = a.valid[s] & (a.tags[s] == key) & way_ok
+    return jnp.any(hits), jnp.argmax(hits), s
+
+
+def insert_lru_dyn(a: Assoc, key: jax.Array, now: jax.Array,
+                   set_mask: jax.Array, n_ways: jax.Array, enable=True):
+    """`insert_lru` against a dynamically sized view of `a`."""
+    s = key & set_mask
+    way_ok = jnp.arange(a.n_ways) < n_ways
+    stamps = jnp.where(way_ok,
+                       jnp.where(a.valid[s], a.meta[s], jnp.int32(-1)),
+                       jnp.iinfo(jnp.int32).max)
+    w = jnp.argmin(stamps)
+    ev_tag = a.tags[s, w]
+    ev_valid = a.valid[s, w]
+    en = jnp.asarray(enable)
+    new = Assoc(
+        tags=a.tags.at[s, w].set(jnp.where(en, key, a.tags[s, w])),
+        valid=a.valid.at[s, w].set(jnp.where(en, True, a.valid[s, w])),
+        meta=a.meta.at[s, w].set(jnp.where(en, now, a.meta[s, w])),
+    )
+    return new, ev_tag, ev_valid & en
+
+
 # ---------------------------------------------------------------- SRRIP
 
 def srrip_age_and_pick(rrpv_row: jax.Array, valid_row: jax.Array):

@@ -1,337 +1,58 @@
-"""Unified MMU + Victima model (paper §§4-6, Table 3).
+"""MMU translation-pipeline driver (paper §§4-6, Table 3).
 
-One scan-step function covers every evaluated system; the static
-``SimConfig`` specializes the compiled code path:
+The translation path is a statically composed list of stages (see
+``repro.core.stages``): L1 TLB -> L2 TLB -> [Victima L2-cache probe] ->
+[hardware L3 TLB] -> [POM-TLB] -> page-table walker (radix or 2-D
+nested).  ``make_step`` folds the composition into one scan-step; the
+static ``SimConfig`` + composition specialize the compiled code path, so
+a jitted ``lax.scan`` simulates ~1M accesses in seconds on CPU exactly
+like the pre-pipeline monolith (golden-snapshot tested bit-for-bit).
 
-  Radix            — baseline 2-level TLB + 4-level radix PTW
-  Opt/Real L2 TLB  — bigger L2 TLB, optimistic (12cyc) or CACTI latency
-  Opt L3 TLB       — hardware L3 TLB behind the L2 TLB
-  POM-TLB          — 64K-entry software-managed L3 TLB resident in memory
-  Victima          — TLB blocks in the L2 cache + PTW-CP + TLB-aware SRRIP
-  NP / I-SP        — virtualized: nested paging (2-D walk + nested TLB,
-                     optionally with Victima TLB & nested-TLB blocks) or
-                     ideal shadow paging (1-D walk)
-
-State is a NamedTuple of integer arrays; every update is a masked scalar/row
-scatter so a jitted ``lax.scan`` simulates ~1M accesses in seconds on CPU.
+Three entry points share the step:
+  simulate         — one (config, trace)
+  simulate_batch   — one config, W workloads in lock-step (vmap)
+  simulate_systems — S shape-compatible systems x W workloads in one
+                     compiled call (vmap over ``Dyn`` sizing scalars) —
+                     how the sweep covers a whole size ladder with a
+                     single compilation.
 """
 from __future__ import annotations
-
-import dataclasses
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import ptwcp
-from repro.core.assoc import Assoc, insert_lru, lookup, make, set_index
-from repro.core.caches import (
-    BT_DATA,
-    BT_NTLB,
-    BT_TLB2,
-    BT_TLB4,
-    Hier,
-    Lat,
-    access_data,
-    access_pte,
-    l2_lookup,
-    l2_retag_to_tlb,
-    l2_touch,
-    make_hier,
-)
-from repro.core.page_table import POM_BASE, PWCs, host_walk, make_pwcs, walk
+from repro.core.caches import BT_DATA, access_data
+from repro.core.stages import (Dyn, Feats, MMUState, Request, STAGES,
+                               SimConfig, Stats, WALK_HIST_BUCKETS,
+                               default_stages, fill_order, make_state,
+                               validate_stages)
+from repro.core.stages.fold import accum_stats, collect_feats
 
-WALK_HIST_BUCKETS = 64  # 10-cycle buckets for the Fig.4 PTW latency CDF
+__all__ = [
+    "Dyn", "Feats", "MMUState", "SimConfig", "Stats", "WALK_HIST_BUCKETS",
+    "make_state", "make_step", "simulate", "simulate_batch",
+    "simulate_systems",
+]
 
 
-@dataclasses.dataclass(frozen=True)
-class SimConfig:
-    """Static simulation configuration (Table 3 defaults)."""
-
-    # --- TLB hierarchy
-    l1d4_sets: int = 16   # 64-entry, 4-way (4K pages)
-    l1d4_ways: int = 4
-    l1d2_sets: int = 8    # 32-entry, 4-way (2M pages)
-    l1d2_ways: int = 4
-    l1tlb_lat: int = 1
-    l2tlb_sets: int = 128  # 1536-entry, 12-way
-    l2tlb_ways: int = 12
-    l2tlb_lat: int = 12
-    # --- optional hardware L3 TLB (0 sets = absent)
-    l3tlb_sets: int = 0
-    l3tlb_ways: int = 16
-    l3tlb_lat: int = 15
-    # --- POM-TLB (software L3 TLB resident in memory)
-    pom: bool = False
-    pom_sets: int = 4096  # 64K entries, 16-way
-    pom_ways: int = 16
-    # --- Victima
-    victima: bool = False
-    tlb_aware: bool = True       # TLB-aware SRRIP at the L2 cache
-    use_ptwcp: bool = True       # False = insert every candidate (ablation)
-    bypass_l2mpki: float = 5.0   # consult PTW-CP only if L2$ MPKI below this
-    pressure_mpki: float = 5.0   # "translation pressure" threshold
-    # --- caches
-    l1_sets: int = 64
-    l1_ways: int = 8
-    l2_sets: int = 2048   # 2MB
-    l2_ways: int = 16
-    l3_sets: int = 2048   # 2MB/core
-    l3_ways: int = 16
-    lat: Lat = Lat()
-    # --- virtualization
-    virt: bool = False           # nested paging 2-D walk
-    ideal_shadow: bool = False   # I-SP: 1-D shadow walk, free updates
-    ntlb_sets: int = 16          # 64-entry nested TLB
-    ntlb_ways: int = 4
-    # --- bookkeeping
-    n_pages4: int = 1 << 21      # 4K-page counter-table entries (masked vpn;
-    #   larger footprints alias — counters are advisory predictor state and
-    #   XLA-CPU copies of >2M-entry carry arrays dominate sim runtime)
-    n_pages2: int = 1 << 14      # 2M-page counter-table entries
-    n_pagesh: int = 1 << 14      # host-page counter table (hashed, virt;
-    #   small: 10 scatter/gather per virt step — see fused-counter note)
-    ipa: float = 3.0             # instructions per traced memory access
-    collect: bool = False        # per-page feature collection (Table 2)
-    n_feat: int = 1 << 20        # feature-table entries (hashed vpn)
-
-
-class Stats(NamedTuple):
-    n_access: jax.Array
-    n_l1tlb_hit: jax.Array
-    n_l2tlb_hit: jax.Array
-    n_l2tlb_miss: jax.Array
-    n_victima_hit: jax.Array
-    n_l3tlb_hit: jax.Array
-    n_pom_hit: jax.Array
-    n_demand_ptw: jax.Array      # native / guest demand walks
-    n_bg_ptw: jax.Array
-    n_host_ptw: jax.Array        # virt: demand host walks
-    n_ntlb_hit: jax.Array
-    n_nvictima_hit: jax.Array    # nested-TLB-block hits in L2 cache
-    sum_trans_cyc: jax.Array     # f32
-    sum_l2miss_cyc: jax.Array    # f32 — translation cycles past the L2 TLB
-    sum_data_cyc: jax.Array      # f32
-    sum_walk_cyc: jax.Array      # f32 — demand walk cycles only
-    hist_walk: jax.Array         # i32 [WALK_HIST_BUCKETS]
-    sum_tlb4_live: jax.Array     # f32 — Σ live TLB blocks (reach, Fig 23)
-    sum_tlb2_live: jax.Array     # f32
-
-
-def _zero_stats() -> Stats:
-    z = jnp.int32(0)
-    f = jnp.float32(0)
-    return Stats(
-        n_access=z, n_l1tlb_hit=z, n_l2tlb_hit=z, n_l2tlb_miss=z,
-        n_victima_hit=z, n_l3tlb_hit=z, n_pom_hit=z, n_demand_ptw=z,
-        n_bg_ptw=z, n_host_ptw=z, n_ntlb_hit=z, n_nvictima_hit=z,
-        sum_trans_cyc=f, sum_l2miss_cyc=f, sum_data_cyc=f, sum_walk_cyc=f,
-        hist_walk=jnp.zeros((WALK_HIST_BUCKETS,), jnp.int32),
-        sum_tlb4_live=f, sum_tlb2_live=f,
-    )
-
-
-class Feats(NamedTuple):
-    """Per-page features for the Table-2 predictor study (hashed table)."""
-    n_access: jax.Array     # uint16
-    n_l1_miss: jax.Array    # uint16
-    n_l2_miss: jax.Array    # uint16 — L2 TLB misses
-    n_walk: jax.Array       # uint16 — unsaturated walk count
-    walk_cyc: jax.Array     # float32 — Σ demand-walk cycles (label source)
-    is2m: jax.Array         # uint8
-
-
-def _zero_feats(n: int) -> Feats:
-    return Feats(
-        n_access=jnp.zeros((n,), jnp.uint16),
-        n_l1_miss=jnp.zeros((n,), jnp.uint16),
-        n_l2_miss=jnp.zeros((n,), jnp.uint16),
-        n_walk=jnp.zeros((n,), jnp.uint16),
-        walk_cyc=jnp.zeros((n,), jnp.float32),
-        is2m=jnp.zeros((n,), jnp.uint8),
-    )
-
-
-class MMUState(NamedTuple):
-    now: jax.Array
-    l1d4: Assoc
-    l1d2: Assoc
-    l2tlb: Assoc
-    l3tlb: Assoc
-    pom: Assoc
-    pwcs: PWCs
-    hier: Hier
-    ntlb: Assoc
-    pc4: ptwcp.PageCounters
-    pc2: ptwcp.PageCounters
-    pch: ptwcp.PageCounters
-    feats: Feats
-    stats: Stats
-
-
-def make_state(cfg: SimConfig) -> MMUState:
-    return MMUState(
-        now=jnp.int32(0),
-        l1d4=make(cfg.l1d4_sets, cfg.l1d4_ways),
-        l1d2=make(cfg.l1d2_sets, cfg.l1d2_ways),
-        l2tlb=make(cfg.l2tlb_sets, cfg.l2tlb_ways),
-        l3tlb=make(max(cfg.l3tlb_sets, 1), cfg.l3tlb_ways),
-        pom=make(cfg.pom_sets if cfg.pom else 1, cfg.pom_ways),
-        pwcs=make_pwcs(),
-        hier=make_hier(cfg.l1_sets, cfg.l1_ways, cfg.l2_sets, cfg.l2_ways,
-                       cfg.l3_sets, cfg.l3_ways),
-        ntlb=make(cfg.ntlb_sets if cfg.virt else 1, cfg.ntlb_ways),
-        pc4=ptwcp.make_counters(cfg.n_pages4),
-        pc2=ptwcp.make_counters(cfg.n_pages2),
-        pch=ptwcp.make_counters(cfg.n_pagesh if cfg.virt else 1),
-        feats=_zero_feats(cfg.n_feat if cfg.collect else 1),
-        stats=_zero_stats(),
-    )
-
-
-def _hash_h(x: jax.Array, n: int) -> jax.Array:
-    return (x * jnp.int32(-1640531535)) & (n - 1)
-
-
-def _nested_translate(cfg: SimConfig, st: MMUState, gpn: jax.Array,
-                      pressure, l2_bypass, enable):
-    """gPA-page → hPA (virt.): nested TLB → [Victima nested-TLB block] →
-    host walk.  Returns (st, cycles, host_walked)."""
-    en = jnp.asarray(enable)
-    hit_n, w_n, s_n = lookup(st.ntlb, gpn)
-    ntlb = st.ntlb._replace(
-        meta=st.ntlb.meta.at[s_n, w_n].set(
-            jnp.where(en & hit_n, st.now, st.ntlb.meta[s_n, w_n])
-        )
-    )
-    st = st._replace(ntlb=ntlb)
-
-    miss = en & ~hit_n
-    cycles = jnp.where(en, 1, 0)  # 1-cycle nested TLB
-
-    # Victima: probe L2 cache for a nested TLB block
-    if cfg.victima:
-        vh, vw, vs = l2_lookup(st.hier.l2, gpn >> 3, BT_NTLB)
-        vhit = miss & vh
-        l2c = l2_touch(st.hier.l2, vs, vw, pressure, cfg.tlb_aware, vhit)
-        st = st._replace(hier=st.hier._replace(l2=l2c))
-        cycles = cycles + jnp.where(vhit, cfg.lat.l2, 0)
-    else:
-        vhit = jnp.bool_(False)
-
-    need_walk = miss & ~vhit
-    hier, wc, ndram, _leaf = host_walk(
-        st.hier, gpn, pressure, cfg.tlb_aware, cfg.lat, need_walk
-    )
-    st = st._replace(hier=hier)
-    cycles = cycles + wc
-
-    # host-page PTW-CP counters + nested-TLB-block insertion
-    hidx = _hash_h(gpn, cfg.n_pagesh)
-    pch = ptwcp.update_counters(st.pch, hidx, ndram >= 1, need_walk)
-    st = st._replace(pch=pch)
-    if cfg.victima:
-        pred = ptwcp.predict_page(pch, hidx) if cfg.use_ptwcp else jnp.bool_(True)
-        ins = need_walk & (pred | l2_bypass)
-        l2c = l2_retag_to_tlb(st.hier.l2, gpn >> 3, BT_NTLB, pressure,
-                              cfg.tlb_aware, ins)
-        st = st._replace(hier=st.hier._replace(l2=l2c))
-
-    # refill nested TLB; evicted nested entry triggers background host walk
-    ntlb2, ev_tag, ev_valid = insert_lru(st.ntlb, gpn, st.now, miss)
-    st = st._replace(ntlb=ntlb2)
-    if cfg.victima:
-        eidx = _hash_h(ev_tag, cfg.n_pagesh)
-        epred = ptwcp.predict_page(st.pch, eidx) if cfg.use_ptwcp else jnp.bool_(True)
-        bg = miss & ev_valid & (epred | l2_bypass)
-        hier, _, bdram, _ = host_walk(st.hier, ev_tag, pressure,
-                                      cfg.tlb_aware, cfg.lat, bg)
-        pch = ptwcp.update_counters(st.pch, eidx, bdram >= 1, bg)
-        l2c = l2_retag_to_tlb(hier.l2, ev_tag >> 3, BT_NTLB, pressure,
-                              cfg.tlb_aware, bg)
-        st = st._replace(hier=hier._replace(l2=l2c), pch=pch)
-
-    return st, cycles, need_walk, en & hit_n, vhit
-
-
-def _guest_walk_2d(cfg: SimConfig, st: MMUState, vpn: jax.Array,
-                   is2m, pressure, l2_bypass, enable):
-    """Nested-paging 2-D walk: every guest-PT access first resolves its own
-    gPA→hPA via ``_nested_translate``.  Returns (st, cycles, n_dram,
-    n_host_walks)."""
-    from repro.core.page_table import (PWC_LAT, _level_lines_2m,
-                                       _level_lines_4k)
-
-    en = jnp.asarray(enable)
-    vpn2 = vpn >> 9
-    l4k = _level_lines_4k(vpn)
-    l2m = _level_lines_2m(vpn2)
-    lines = [
-        jnp.where(is2m, l2m[0], l4k[0]),
-        jnp.where(is2m, l2m[1], l4k[1]),
-        jnp.where(is2m, l2m[2], l4k[2]),
-        l4k[3],
-    ]
-    n_levels = jnp.where(is2m, 3, 4)
-
-    k_pml4 = jnp.where(is2m, vpn2 >> 18, vpn >> 27)
-    k_pdp = jnp.where(is2m, vpn2 >> 9, vpn >> 18)
-    k_pd = vpn >> 9
-    hit4, _, _ = lookup(st.pwcs.pml4, k_pml4)
-    hit3, _, _ = lookup(st.pwcs.pdp, k_pdp)
-    hit2, _, _ = lookup(st.pwcs.pd, k_pd)
-    hit2 = hit2 & ~is2m
-    start = jnp.where(hit2, 3, jnp.where(hit3, 2, jnp.where(hit4, 1, 0)))
-    start = jnp.where(is2m, jnp.minimum(start, 2), start)
-
-    cycles = jnp.where(en, jnp.int32(PWC_LAT), 0)
-    n_dram = jnp.int32(0)
-    n_host = jnp.int32(0)
-    n_nt_hit = jnp.int32(0)
-    n_nv_hit = jnp.int32(0)
-    for slot in range(4):
-        slot_en = en & (slot >= start) & (slot < n_levels)
-        # translate the guest-PT line's gPA page first
-        st, ncyc, walked, nth, nvh = _nested_translate(
-            cfg, st, lines[slot] >> 6, pressure, l2_bypass, slot_en
-        )
-        n_host = n_host + (walked & slot_en).astype(jnp.int32)
-        n_nt_hit = n_nt_hit + nth.astype(jnp.int32)
-        n_nv_hit = n_nv_hit + nvh.astype(jnp.int32)
-        hier, c, d = access_pte(st.hier, lines[slot], pressure,
-                                cfg.tlb_aware, cfg.lat, slot_en)
-        st = st._replace(hier=hier)
-        cycles = cycles + ncyc + c
-        n_dram = n_dram + d.astype(jnp.int32)
-
-    p4, _, _ = insert_lru(st.pwcs.pml4, k_pml4, st.now, en & (start <= 0))
-    p3, _, _ = insert_lru(st.pwcs.pdp, k_pdp, st.now, en & (start <= 1))
-    p2, _, _ = insert_lru(st.pwcs.pd, k_pd, st.now, en & (start <= 2) & ~is2m)
-    st = st._replace(pwcs=PWCs(pml4=p4, pdp=p3, pd=p2))
-
-    # finally translate the data page's own gPA (gpn = vpn, identity map)
-    st, ncyc, walked, nth, nvh = _nested_translate(
-        cfg, st, vpn, pressure, l2_bypass, en)
-    n_host = n_host + (walked & en).astype(jnp.int32)
-    n_nt_hit = n_nt_hit + nth.astype(jnp.int32)
-    n_nv_hit = n_nv_hit + nvh.astype(jnp.int32)
-    return st, cycles + ncyc, n_dram, n_host, n_nt_hit, n_nv_hit
-
-
-def make_step(cfg: SimConfig):
+def make_step(cfg: SimConfig, stage_names=None, dyn: Dyn | None = None):
     """Build the scan-step for this configuration.
 
-    Trace record: dict(vpn=int32 4K-VPN, is2m=bool, line=int32 data line id,
-    ipa=float32 — per-trace instructions/access so a vmapped batch of
-    workloads shares one compiled step).
+    Trace record: dict(vpn=int32 4K-VPN, is2m=bool, line=int32 data line
+    id, ipa=float32 — per-trace instructions/access so a vmapped batch of
+    workloads shares one compiled step).  `dyn` carries traced sizing
+    overrides for ladder-batched runs (vmap it alongside the state).
     """
+    names = tuple(stage_names) if stage_names else default_stages(cfg)
+    validate_stages(cfg, names)
+    stages = [STAGES[n] for n in names]
+    fills = [STAGES[n] for n in fill_order(names)]
     pressure_thr = jnp.float32(cfg.pressure_mpki)
     bypass_thr = jnp.float32(cfg.bypass_l2mpki)
 
     def step(st: MMUState, acc):
         vpn = acc["vpn"]
         is2m = acc["is2m"]
-        line = acc["line"]
         ipa = acc.get("ipa", jnp.float32(cfg.ipa))
         now = st.now + 1
         st = st._replace(now=now)
@@ -342,242 +63,44 @@ def make_step(cfg: SimConfig):
                     > pressure_thr * instrs)
         l2_bypass = (st.hier.n_l2_miss.astype(jnp.float32) * 1000.0
                      >= bypass_thr * instrs)
-
         vpn2 = vpn >> 9
         vpn_sz = jnp.where(is2m, vpn2, vpn)
+        req = Request(
+            vpn=vpn, is2m=is2m, line=acc["line"], ipa=ipa, vpn2=vpn2,
+            vpn_sz=vpn_sz, key2=(vpn_sz << 1) | is2m.astype(jnp.int32),
+            now=now, pressure=pressure, l2_bypass=l2_bypass, dyn=dyn,
+        )
 
-        # ---------------- L1 D-TLBs (split by page size)
-        h4, w4, s4 = lookup(st.l1d4, vpn)
-        h2, w2, s2 = lookup(st.l1d2, vpn2)
-        hit1 = jnp.where(is2m, h2, h4)
-        l1d4 = st.l1d4._replace(meta=st.l1d4.meta.at[s4, w4].set(
-            jnp.where(h4 & ~is2m, now, st.l1d4.meta[s4, w4])))
-        l1d2 = st.l1d2._replace(meta=st.l1d2.meta.at[s2, w2].set(
-            jnp.where(h2 & is2m, now, st.l1d2.meta[s2, w2])))
-        st = st._replace(l1d4=l1d4, l1d2=l1d2)
+        # ---------------- lookup pass: fold the composition
+        out: dict = {}
+        need = jnp.bool_(True)
+        trans = jnp.int32(0)   # cycles up to and including the L2 TLB
+        past_l2 = jnp.int32(0)  # cycles past the L2 TLB (Fig 9/22/29)
+        for stg in stages:
+            st, res = stg.lookup(cfg, st, req, need)
+            need = need & ~res.hit
+            out[stg.name] = res._replace(need=need)
+            if stg.past_l2:
+                past_l2 = past_l2 + res.cycles
+            else:
+                trans = trans + res.cycles
+        walk_res = out["_walk"] = out[names[-1]]
 
-        # ---------------- unified L2 TLB
-        key2 = (vpn_sz << 1) | is2m.astype(jnp.int32)
-        ht, wt, stt = lookup(st.l2tlb, key2)
-        miss1 = ~hit1
-        l2tlb_hit = miss1 & ht
-        miss2 = miss1 & ~ht
-        l2tlb = st.l2tlb._replace(meta=st.l2tlb.meta.at[stt, wt].set(
-            jnp.where(l2tlb_hit, now, st.l2tlb.meta[stt, wt])))
-        st = st._replace(l2tlb=l2tlb)
-
-        trans = jnp.int32(cfg.l1tlb_lat)
-        trans = trans + jnp.where(miss1, cfg.l2tlb_lat, 0)
-        past_l2 = jnp.int32(0)  # cycles after the L2 TLB probe (Fig 9/22/29)
-
-        # ---------------- Victima: TLB-block probe in the L2 cache
-        if cfg.victima:
-            vkey = jnp.where(is2m, vpn2 >> 3, vpn >> 3)
-            vbt = jnp.where(is2m, BT_TLB2, BT_TLB4)
-            # typed lookup (btype must match)
-            sset = set_index(vkey, st.hier.l2.n_sets)
-            rows_hit = (st.hier.l2.valid[sset]
-                        & (st.hier.l2.tags[sset] == vkey)
-                        & (st.hier.l2.btype[sset] == vbt))
-            vh = jnp.any(rows_hit)
-            vwy = jnp.argmax(rows_hit)
-            vhit = miss2 & vh
-            l2c = l2_touch(st.hier.l2, sset, vwy, pressure, cfg.tlb_aware, vhit)
-            st = st._replace(hier=st.hier._replace(l2=l2c))
-            past_l2 = past_l2 + jnp.where(vhit, cfg.lat.l2, 0)
-        else:
-            vhit = jnp.bool_(False)
-
-        need_more = miss2 & ~vhit
-
-        # ---------------- optional hardware L3 TLB
-        if cfg.l3tlb_sets > 0:
-            h3, w3, s3 = lookup(st.l3tlb, key2)
-            l3hit = need_more & h3
-            l3tlb = st.l3tlb._replace(meta=st.l3tlb.meta.at[s3, w3].set(
-                jnp.where(l3hit, now, st.l3tlb.meta[s3, w3])))
-            st = st._replace(l3tlb=l3tlb)
-            past_l2 = past_l2 + jnp.where(need_more, cfg.l3tlb_lat, 0)
-            need_more = need_more & ~h3
-        else:
-            l3hit = jnp.bool_(False)
-
-        # ---------------- POM-TLB (software L3, entries fetched via caches)
-        if cfg.pom:
-            pom_line = POM_BASE + ((key2 & ((cfg.pom_sets * cfg.pom_ways) - 1)) >> 2)
-            hier, pc_cyc, _ = access_pte(
-                st.hier, pom_line, pressure, cfg.tlb_aware, cfg.lat,
-                need_more, bt=BT_TLB4,
-            )
-            st = st._replace(hier=hier)
-            hp, wp, sp = lookup(st.pom, key2)
-            pomhit = need_more & hp
-            pom = st.pom._replace(meta=st.pom.meta.at[sp, wp].set(
-                jnp.where(pomhit, now, st.pom.meta[sp, wp])))
-            st = st._replace(pom=pom)
-            past_l2 = past_l2 + pc_cyc
-            need_more = need_more & ~hp
-        else:
-            pomhit = jnp.bool_(False)
-
-        # ---------------- page-table walk (demand)
-        walk_en = need_more
-        if cfg.virt and not cfg.ideal_shadow:
-            st, wcyc, ndram, nhost, n_nt_hit, n_nv_hit = _guest_walk_2d(
-                cfg, st, vpn, is2m, pressure, l2_bypass, walk_en
-            )
-        else:
-            hier, pwcs, wcyc, ndram = walk(
-                st.hier, st.pwcs, vpn, is2m, now, pressure,
-                cfg.tlb_aware, cfg.lat, walk_en,
-            )
-            st = st._replace(hier=hier, pwcs=pwcs)
-            nhost = jnp.int32(0)
-            n_nt_hit = jnp.int32(0)
-            n_nv_hit = jnp.int32(0)
-        past_l2 = past_l2 + wcyc
-
-        n_bg = jnp.int32(0)
-        if not cfg.victima:
-            # PTW-CP counters for the walked page
-            pc4 = ptwcp.update_counters(
-                st.pc4, vpn & (cfg.n_pages4 - 1), ndram >= 1,
-                walk_en & ~is2m)
-            pc2 = ptwcp.update_counters(
-                st.pc2, vpn2 & (cfg.n_pages2 - 1), ndram >= 1,
-                walk_en & is2m)
-            st = st._replace(pc4=pc4, pc2=pc2)
-            l2tlb2, ev_tag, ev_valid = insert_lru(st.l2tlb, key2, now, miss2)
-            st = st._replace(l2tlb=l2tlb2)
-        else:
-            # ---------------- Victima flows. All counter-table traffic is
-            # fused into ONE gather + ONE scatter per array so the XLA CPU
-            # backend keeps the (multi-MB) tables in place across the scan.
-            l2tlb2, ev_tag, ev_valid = insert_lru(st.l2tlb, key2, now, miss2)
-            st = st._replace(l2tlb=l2tlb2)
-            ev_vpn = ev_tag >> 1
-            ev2m = (ev_tag & 1).astype(jnp.bool_)
-            bg_vpn4 = jnp.where(ev2m, ev_vpn << 9, ev_vpn)
-
-            i4 = jnp.stack([vpn & (cfg.n_pages4 - 1),
-                            bg_vpn4 & (cfg.n_pages4 - 1)])
-            i2 = jnp.stack([vpn2 & (cfg.n_pages2 - 1),
-                            ev_vpn & (cfg.n_pages2 - 1)])
-            f4, c4 = st.pc4.freq[i4].astype(jnp.int32), \
-                st.pc4.cost[i4].astype(jnp.int32)
-            f2, c2 = st.pc2.freq[i2].astype(jnp.int32), \
-                st.pc2.cost[i2].astype(jnp.int32)
-
-            # demand prediction on post-walk counters (computed analytically)
-            fpost = jnp.where(is2m, f2[0], f4[0]) + walk_en.astype(jnp.int32)
-            cpost = jnp.where(is2m, c2[0], c4[0]) \
-                + (walk_en & (ndram >= 1)).astype(jnp.int32)
-            pred = ptwcp.predict(jnp.minimum(fpost, ptwcp.FREQ_MAX),
-                                 jnp.minimum(cpost, ptwcp.COST_MAX))
-            pred = pred if cfg.use_ptwcp else jnp.bool_(True)
-            ins = walk_en & (pred | l2_bypass)
-            l2c = l2_retag_to_tlb(st.hier.l2, vkey, vbt, pressure,
-                                  cfg.tlb_aware, ins)
-            st = st._replace(hier=st.hier._replace(l2=l2c))
-
-            # eviction-triggered background walk + TLB-block install
-            fe = jnp.where(ev2m, f2[1], f4[1])
-            ce = jnp.where(ev2m, c2[1], c4[1])
-            epred = ptwcp.predict(fe, ce)
-            epred = epred if cfg.use_ptwcp else jnp.bool_(True)
-            bg = miss2 & ev_valid & (epred | l2_bypass)
-            hier, pwcs, _, bdram = walk(
-                st.hier, st.pwcs, bg_vpn4, ev2m, now, pressure,
-                cfg.tlb_aware, cfg.lat, bg,
-            )
-            ebt = jnp.where(ev2m, BT_TLB2, BT_TLB4)
-            l2c = l2_retag_to_tlb(hier.l2, ev_vpn >> 3, ebt, pressure,
-                                  cfg.tlb_aware, bg)
-            st = st._replace(hier=hier._replace(l2=l2c), pwcs=pwcs)
-            n_bg = bg.astype(jnp.int32)
-
-            # fused saturating counter writeback (2 slots per table)
-            en4 = jnp.stack([walk_en & ~is2m, bg & ~ev2m])
-            en2 = jnp.stack([walk_en & is2m, bg & ev2m])
-            dr = jnp.stack([ndram >= 1, bdram >= 1])
-            nf4 = jnp.minimum(f4 + en4, ptwcp.FREQ_MAX)
-            nc4 = jnp.minimum(c4 + (en4 & dr), ptwcp.COST_MAX)
-            nf2 = jnp.minimum(f2 + en2, ptwcp.FREQ_MAX)
-            nc2 = jnp.minimum(c2 + (en2 & dr), ptwcp.COST_MAX)
-            st = st._replace(
-                pc4=ptwcp.PageCounters(
-                    freq=st.pc4.freq.at[i4].set(nf4.astype(jnp.uint8)),
-                    cost=st.pc4.cost.at[i4].set(nc4.astype(jnp.uint8))),
-                pc2=ptwcp.PageCounters(
-                    freq=st.pc2.freq.at[i2].set(nf2.astype(jnp.uint8)),
-                    cost=st.pc2.cost.at[i2].set(nc2.astype(jnp.uint8))),
-            )
-
-        # POM-TLB learns walked + evicted entries
-        if cfg.pom:
-            pom2, _, _ = insert_lru(st.pom, key2, now, walk_en)
-            pom2, _, _ = insert_lru(pom2, ev_tag, now, miss2 & ev_valid)
-            st = st._replace(pom=pom2)
-        if cfg.l3tlb_sets > 0:
-            l3t, _, _ = insert_lru(st.l3tlb, key2, now, walk_en)
-            st = st._replace(l3tlb=l3t)
-
-        # refill L1 TLB
-        l1d4b, _, _ = insert_lru(st.l1d4, vpn, now, miss1 & ~is2m)
-        l1d2b, _, _ = insert_lru(st.l1d2, vpn2, now, miss1 & is2m)
-        st = st._replace(l1d4=l1d4b, l1d2=l1d2b)
+        # ---------------- fill pass: refills, learning, background walks
+        for stg in fills:
+            st = stg.fill(cfg, st, req, out)
 
         trans = trans + past_l2
 
         # ---------------- the data access itself
-        hier, dcyc = access_data(st.hier, line, now, pressure,
+        hier, dcyc = access_data(st.hier, req.line, now, pressure,
                                  cfg.tlb_aware, cfg.lat)
         st = st._replace(hier=hier)
 
-        # ---------------- stats
-        bucket = jnp.minimum(wcyc // 10, WALK_HIST_BUCKETS - 1)
-        l2 = st.hier.l2
-        stats = Stats(
-            n_access=s0.n_access + 1,
-            n_l1tlb_hit=s0.n_l1tlb_hit + hit1.astype(jnp.int32),
-            n_l2tlb_hit=s0.n_l2tlb_hit + l2tlb_hit.astype(jnp.int32),
-            n_l2tlb_miss=s0.n_l2tlb_miss + miss2.astype(jnp.int32),
-            n_victima_hit=s0.n_victima_hit + vhit.astype(jnp.int32),
-            n_l3tlb_hit=s0.n_l3tlb_hit + l3hit.astype(jnp.int32),
-            n_pom_hit=s0.n_pom_hit + pomhit.astype(jnp.int32),
-            n_demand_ptw=s0.n_demand_ptw + walk_en.astype(jnp.int32),
-            n_bg_ptw=s0.n_bg_ptw + n_bg,
-            n_host_ptw=s0.n_host_ptw + nhost,
-            n_ntlb_hit=s0.n_ntlb_hit + n_nt_hit,
-            n_nvictima_hit=s0.n_nvictima_hit + n_nv_hit,
-            sum_trans_cyc=s0.sum_trans_cyc + trans.astype(jnp.float32),
-            sum_l2miss_cyc=s0.sum_l2miss_cyc
-            + jnp.where(miss2, past_l2, 0).astype(jnp.float32),
-            sum_data_cyc=s0.sum_data_cyc + dcyc.astype(jnp.float32),
-            sum_walk_cyc=s0.sum_walk_cyc
-            + jnp.where(walk_en, wcyc, 0).astype(jnp.float32),
-            hist_walk=s0.hist_walk.at[bucket].add(walk_en.astype(jnp.int32)),
-            sum_tlb4_live=s0.sum_tlb4_live + l2.n_tlb4.astype(jnp.float32),
-            sum_tlb2_live=s0.sum_tlb2_live + l2.n_tlb2.astype(jnp.float32),
-        )
-        st = st._replace(stats=stats)
-
-        if cfg.collect:  # Table-2 per-page feature stream
-            fi = (vpn_sz * jnp.int32(-1640531535)) & (cfg.n_feat - 1)
-            ft = st.feats
-            u1 = jnp.uint16(1)
-            st = st._replace(feats=Feats(
-                n_access=ft.n_access.at[fi].add(u1),
-                n_l1_miss=ft.n_l1_miss.at[fi].add(
-                    jnp.where(miss1, u1, 0).astype(jnp.uint16)),
-                n_l2_miss=ft.n_l2_miss.at[fi].add(
-                    jnp.where(miss2, u1, 0).astype(jnp.uint16)),
-                n_walk=ft.n_walk.at[fi].add(
-                    jnp.where(walk_en, u1, 0).astype(jnp.uint16)),
-                walk_cyc=ft.walk_cyc.at[fi].add(
-                    jnp.where(walk_en, wcyc, 0).astype(jnp.float32)),
-                is2m=ft.is2m.at[fi].set(is2m.astype(jnp.uint8)),
-            ))
+        st = st._replace(stats=accum_stats(s0, st, out, walk_res,
+                                           trans, past_l2, dcyc))
+        if cfg.collect:
+            st = collect_feats(cfg, st, req, out, walk_res)
         return st, ()
 
     return step
@@ -596,9 +119,19 @@ def _final_hists(l2):
     return hd, ht
 
 
-def simulate(cfg: SimConfig, trace: dict) -> Stats:
+def _extras_of(cfg, l2a, l2m, hd, ht, feats, pc4, index=lambda x: x):
+    e = {"l2_access": int(index(l2a)), "l2_miss": int(index(l2m)),
+         "hist_reuse_data": jax.device_get(index(hd)),
+         "hist_reuse_tlb": jax.device_get(index(ht))}
+    if cfg.collect:
+        e["feats"] = jax.tree.map(lambda x: jax.device_get(index(x)), feats)
+        e["pc4"] = jax.tree.map(lambda x: jax.device_get(index(x)), pc4)
+    return e
+
+
+def simulate(cfg: SimConfig, trace: dict, stage_names=None):
     """Run one trace under `cfg`; returns (Stats, extras)."""
-    step = make_step(cfg)
+    step = make_step(cfg, stage_names)
 
     @jax.jit
     def run(tr):
@@ -610,26 +143,18 @@ def simulate(cfg: SimConfig, trace: dict) -> Stats:
 
     stats, l2a, l2m, hd, ht, feats, pc4 = run(trace)
     stats = jax.tree.map(lambda x: jax.device_get(x), stats)
-    extras = {
-        "l2_access": int(l2a), "l2_miss": int(l2m),
-        "hist_reuse_data": jax.device_get(hd),
-        "hist_reuse_tlb": jax.device_get(ht),
-    }
-    if cfg.collect:
-        extras["feats"] = jax.tree.map(jax.device_get, feats)
-        extras["pc4"] = jax.tree.map(jax.device_get, pc4)
-    return stats, extras
+    return stats, _extras_of(cfg, l2a, l2m, hd, ht, feats, pc4)
 
 
-def simulate_batch(cfg: SimConfig, traces: dict):
+def simulate_batch(cfg: SimConfig, traces: dict, stage_names=None):
     """Run W workloads in lock-step: traces leaves are [T, W, ...].
 
-    One compile + one scan of a vmapped step — on a single CPU core this is
-    ~an order of magnitude faster than W sequential runs (SIMD across the
-    workload lane, per-step dispatch amortized).
+    One compile + one scan of a vmapped step — on a single CPU core this
+    is ~an order of magnitude faster than W sequential runs (SIMD across
+    the workload lane, per-step dispatch amortized).
     Returns (Stats [W], extras list of per-workload dicts).
     """
-    step = make_step(cfg)
+    step = make_step(cfg, stage_names)
     W = jax.tree.leaves(traces)[0].shape[1]
 
     @jax.jit
@@ -645,14 +170,45 @@ def simulate_batch(cfg: SimConfig, traces: dict):
 
     stats, l2a, l2m, hd, ht, feats, pc4 = run(traces)
     stats = jax.tree.map(jax.device_get, stats)
-    extras = []
-    for i in range(W):
-        e = {"l2_access": int(l2a[i]), "l2_miss": int(l2m[i]),
-             "hist_reuse_data": jax.device_get(hd[i]),
-             "hist_reuse_tlb": jax.device_get(ht[i])}
-        if cfg.collect:
-            e["feats"] = jax.tree.map(lambda x: jax.device_get(x[i]), feats)
-            e["pc4"] = jax.tree.map(lambda x: jax.device_get(x[i]), pc4)
-        extras.append(e)
-    per = [jax.tree.map(lambda x: x[i], stats) for i in range(W)]
+    extras = [_extras_of(cfg, l2a, l2m, hd, ht, feats, pc4,
+                         index=lambda x, i=i: x[i]) for i in range(W)]
+    per = [jax.tree.map(lambda x, i=i: x[i], stats) for i in range(W)]
+    return per, extras
+
+
+def simulate_systems(cfg: SimConfig, dyns: Dyn, traces: dict,
+                     stage_names=None):
+    """Run S shape-compatible systems x W workloads in ONE compiled call.
+
+    `cfg` is the ladder's static base config (structures allocated at the
+    ladder maximum); `dyns` has [S]-shaped leaves of per-system sizing
+    scalars; traces leaves are [T, W, ...] (shared across systems).
+    Returns (list[S] of list[W] Stats, matching extras).
+    """
+    S = jax.tree.leaves(dyns)[0].shape[0]
+    W = jax.tree.leaves(traces)[0].shape[1]
+
+    @jax.jit
+    def run(d, tr):
+        base = make_state(cfg)
+        st0 = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (W,) + x.shape), base)
+
+        def one_system(dd):
+            step = make_step(cfg, stage_names, dyn=dd)
+            st, _ = jax.lax.scan(
+                lambda ss, acc: (jax.vmap(step)(ss, acc)[0], ()), st0, tr)
+            hd, ht = jax.vmap(_final_hists)(st.hier.l2)
+            return (st.stats, st.hier.n_l2_access, st.hier.n_l2_miss,
+                    hd, ht, st.feats, st.pc4)
+
+        return jax.vmap(one_system)(d)
+
+    stats, l2a, l2m, hd, ht, feats, pc4 = run(dyns, traces)
+    stats = jax.tree.map(jax.device_get, stats)
+    per = [[jax.tree.map(lambda x, s=s, w=w: x[s, w], stats)
+            for w in range(W)] for s in range(S)]
+    extras = [[_extras_of(cfg, l2a, l2m, hd, ht, feats, pc4,
+                          index=lambda x, s=s, w=w: x[s, w])
+               for w in range(W)] for s in range(S)]
     return per, extras

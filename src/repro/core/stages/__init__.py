@@ -1,0 +1,77 @@
+"""Composable translation-pipeline stages.
+
+``STAGES`` maps stage names to singleton stage objects; a *composition*
+is an ordered tuple of names ending in a walker stage ("ptw" or
+"ptw2d").  ``default_stages(cfg)`` derives the canonical composition
+from a SimConfig; the system registry (repro.sim.systems) declares each
+evaluated system's composition explicitly and is validated against it.
+"""
+from __future__ import annotations
+
+from repro.core.stages.base import (DYN_FIELDS, Dyn, Feats, MMUState,
+                                    Request, SimConfig, Stage, StageResult,
+                                    Stats, WALK_HIST_BUCKETS, dyn_of,
+                                    make_state, zero_feats, zero_stats)
+from repro.core.stages.l1_tlb import L1TLBStage
+from repro.core.stages.l2_tlb import L2TLBStage
+from repro.core.stages.l3_tlb import L3TLBStage
+from repro.core.stages.nested import NestedWalkStage
+from repro.core.stages.pom import POMStage
+from repro.core.stages.ptw import RadixWalkStage
+from repro.core.stages.victima import VictimaStage
+
+STAGES: dict[str, Stage] = {
+    s.name: s for s in (
+        L1TLBStage(), L2TLBStage(), VictimaStage(), L3TLBStage(),
+        POMStage(), RadixWalkStage(), NestedWalkStage(),
+    )
+}
+
+WALK_STAGES = ("ptw", "ptw2d")
+
+
+def default_stages(cfg: SimConfig) -> tuple[str, ...]:
+    """Canonical stage composition implied by a SimConfig."""
+    names = ["l1_tlb", "l2_tlb"]
+    if cfg.victima:
+        names.append("victima")
+    if cfg.l3tlb_sets > 0:
+        names.append("l3_tlb")
+    if cfg.pom:
+        names.append("pom")
+    names.append("ptw2d" if cfg.virt and not cfg.ideal_shadow else "ptw")
+    return tuple(names)
+
+
+def validate_stages(cfg: SimConfig, names: tuple[str, ...]) -> None:
+    """A composition must agree with the config flags the stages read."""
+    expect = default_stages(cfg)
+    if tuple(names) != expect:
+        raise ValueError(
+            f"stage composition {names} inconsistent with config "
+            f"(expected {expect}: the victima/l3/pom/virt flags and the "
+            f"stage list must agree)")
+
+
+def fill_order(names: tuple[str, ...]) -> tuple[str, ...]:
+    """Refill/learning pass order for a composition.
+
+    Victima systems: the L2 TLB refill's evicted entry feeds Victima's
+    background walk, so it must land first.  Non-Victima systems update
+    the walker's PTW-CP counters then refill the L2 TLB.  POM / L3-TLB
+    learning and the L1 refill close out every composition.
+    """
+    walker = names[-1]
+    order = ["l2_tlb", "victima"] if "victima" in names \
+        else [walker, "l2_tlb"]
+    order += [n for n in ("pom", "l3_tlb") if n in names]
+    order.append("l1_tlb")
+    return tuple(order)
+
+
+__all__ = [
+    "DYN_FIELDS", "Dyn", "Feats", "MMUState", "Request", "STAGES",
+    "SimConfig", "Stage", "StageResult", "Stats", "WALK_HIST_BUCKETS",
+    "WALK_STAGES", "default_stages", "dyn_of", "fill_order", "make_state",
+    "validate_stages", "zero_feats", "zero_stats",
+]

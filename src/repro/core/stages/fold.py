@@ -1,0 +1,68 @@
+"""Per-step folds over the pipeline's stage results: Stats accumulation
+and the Table-2 per-page feature stream."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.stages.base import (Feats, MMUState, Stats,
+                                    WALK_HIST_BUCKETS, hash_h)
+
+
+def _hit32(out, name):
+    return out[name].hit.astype(jnp.int32) if name in out else jnp.int32(0)
+
+
+def accum_stats(s0: Stats, st: MMUState, out, walk_res, trans, past_l2,
+                dcyc) -> Stats:
+    miss2 = out["l2_tlb"].need
+    walk_en = walk_res.info["walk_en"]
+    wcyc = walk_res.cycles
+    n_bg = out["victima"].info["n_bg"] if "victima" in out else jnp.int32(0)
+    bucket = jnp.minimum(wcyc // 10, WALK_HIST_BUCKETS - 1)
+    l2 = st.hier.l2
+    return Stats(
+        n_access=s0.n_access + 1,
+        n_l1tlb_hit=s0.n_l1tlb_hit + _hit32(out, "l1_tlb"),
+        n_l2tlb_hit=s0.n_l2tlb_hit + _hit32(out, "l2_tlb"),
+        n_l2tlb_miss=s0.n_l2tlb_miss + miss2.astype(jnp.int32),
+        n_victima_hit=s0.n_victima_hit + _hit32(out, "victima"),
+        n_l3tlb_hit=s0.n_l3tlb_hit + _hit32(out, "l3_tlb"),
+        n_pom_hit=s0.n_pom_hit + _hit32(out, "pom"),
+        n_demand_ptw=s0.n_demand_ptw + walk_en.astype(jnp.int32),
+        n_bg_ptw=s0.n_bg_ptw + n_bg,
+        n_host_ptw=s0.n_host_ptw + walk_res.info["nhost"],
+        n_ntlb_hit=s0.n_ntlb_hit + walk_res.info["n_nt_hit"],
+        n_nvictima_hit=s0.n_nvictima_hit + walk_res.info["n_nv_hit"],
+        sum_trans_cyc=s0.sum_trans_cyc + trans.astype(jnp.float32),
+        sum_l2miss_cyc=s0.sum_l2miss_cyc
+        + jnp.where(miss2, past_l2, 0).astype(jnp.float32),
+        sum_data_cyc=s0.sum_data_cyc + dcyc.astype(jnp.float32),
+        sum_walk_cyc=s0.sum_walk_cyc
+        + jnp.where(walk_en, wcyc, 0).astype(jnp.float32),
+        hist_walk=s0.hist_walk.at[bucket].add(walk_en.astype(jnp.int32)),
+        sum_tlb4_live=s0.sum_tlb4_live + l2.n_tlb4.astype(jnp.float32),
+        sum_tlb2_live=s0.sum_tlb2_live + l2.n_tlb2.astype(jnp.float32),
+    )
+
+
+def collect_feats(cfg, st: MMUState, req, out, walk_res) -> MMUState:
+    """Table-2 per-page feature stream (hashed table)."""
+    miss1 = out["l1_tlb"].need
+    miss2 = out["l2_tlb"].need
+    walk_en = walk_res.info["walk_en"]
+    wcyc = walk_res.cycles
+    fi = hash_h(req.vpn_sz, cfg.n_feat)
+    ft = st.feats
+    u1 = jnp.uint16(1)
+    return st._replace(feats=Feats(
+        n_access=ft.n_access.at[fi].add(u1),
+        n_l1_miss=ft.n_l1_miss.at[fi].add(
+            jnp.where(miss1, u1, 0).astype(jnp.uint16)),
+        n_l2_miss=ft.n_l2_miss.at[fi].add(
+            jnp.where(miss2, u1, 0).astype(jnp.uint16)),
+        n_walk=ft.n_walk.at[fi].add(
+            jnp.where(walk_en, u1, 0).astype(jnp.uint16)),
+        walk_cyc=ft.walk_cyc.at[fi].add(
+            jnp.where(walk_en, wcyc, 0).astype(jnp.float32)),
+        is2m=ft.is2m.at[fi].set(req.is2m.astype(jnp.uint8)),
+    ))

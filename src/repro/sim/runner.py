@@ -1,4 +1,12 @@
-"""Simulation driver: evaluated-system presets (Table 3) + cached runs."""
+"""Simulation driver: cached runs over the system registry.
+
+Systems are declared in ``repro.sim.systems``; this module turns
+(system, workload) pairs into disk-cached Stats.  Cache writes are
+crash-safe (temp file + atomic rename) and unreadable entries are
+treated as missing, so an interrupted sweep can never poison later
+runs.  ``run_ladder`` fills a whole shape-compatible system ladder with
+ONE compiled, vmapped simulate call.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -6,6 +14,7 @@ import hashlib
 import json
 import os
 import pickle
+import tempfile
 
 import jax
 
@@ -18,63 +27,15 @@ jax.config.update("jax_persistent_cache_min_compile_time_secs", 5)
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.mmu import SimConfig, simulate, simulate_batch
-from repro.sim import trace_gen
+from repro.core.mmu import simulate, simulate_batch, simulate_systems
+from repro.sim import systems, trace_gen
 
 CACHE_DIR = os.environ.get("REPRO_SIM_CACHE", "/root/repo/.sim_cache")
 
 
-def system_config(system: str) -> SimConfig:
-    """Named presets for every evaluated system (paper Table 3)."""
-    base = SimConfig()
-    presets = {
-        # --- native
-        "radix": base,
-        "victima": dataclasses.replace(base, victima=True),
-        "victima_agnostic": dataclasses.replace(
-            base, victima=True, tlb_aware=False),
-        "victima_noptwcp": dataclasses.replace(
-            base, victima=True, use_ptwcp=False),
-        "pom": dataclasses.replace(base, pom=True),
-        # optimistic large L2 TLBs (12-cycle regardless of size)
-        "l2tlb_3k": dataclasses.replace(base, l2tlb_sets=256),
-        "l2tlb_8k": dataclasses.replace(base, l2tlb_sets=512, l2tlb_ways=16),
-        "l2tlb_16k": dataclasses.replace(base, l2tlb_sets=1024, l2tlb_ways=16),
-        "l2tlb_32k": dataclasses.replace(base, l2tlb_sets=2048, l2tlb_ways=16),
-        "l2tlb_64k": dataclasses.replace(base, l2tlb_sets=4096, l2tlb_ways=16),
-        "l2tlb_128k": dataclasses.replace(base, l2tlb_sets=8192, l2tlb_ways=16),
-        # realistic latencies from CACTI 7.0 (paper §3.1: 1.4× per 2×)
-        "l2tlb_8k_real": dataclasses.replace(
-            base, l2tlb_sets=512, l2tlb_ways=16, l2tlb_lat=17),
-        "l2tlb_16k_real": dataclasses.replace(
-            base, l2tlb_sets=1024, l2tlb_ways=16, l2tlb_lat=23),
-        "l2tlb_32k_real": dataclasses.replace(
-            base, l2tlb_sets=2048, l2tlb_ways=16, l2tlb_lat=30),
-        "l2tlb_64k_real": dataclasses.replace(
-            base, l2tlb_sets=4096, l2tlb_ways=16, l2tlb_lat=39),
-        # hardware L3 TLB (64K entries) at various latencies
-        "l3tlb_64k_15": dataclasses.replace(base, l3tlb_sets=4096, l3tlb_lat=15),
-        "l3tlb_64k_24": dataclasses.replace(base, l3tlb_sets=4096, l3tlb_lat=24),
-        "l3tlb_64k_39": dataclasses.replace(base, l3tlb_sets=4096, l3tlb_lat=39),
-        # --- L2 cache size sensitivity (Fig. 25): 1/4/8 MB
-        "victima_l2_1m": dataclasses.replace(base, victima=True,
-                                             l2_sets=1024),
-        "victima_l2_4m": dataclasses.replace(base, victima=True,
-                                             l2_sets=4096),
-        "victima_l2_8m": dataclasses.replace(base, victima=True,
-                                             l2_sets=8192),
-        "radix_l2_1m": dataclasses.replace(base, l2_sets=1024),
-        "radix_l2_4m": dataclasses.replace(base, l2_sets=4096),
-        "radix_l2_8m": dataclasses.replace(base, l2_sets=8192),
-        # --- Table 2 feature collection
-        "radix_collect": dataclasses.replace(base, collect=True),
-        # --- virtualized
-        "np": dataclasses.replace(base, virt=True),
-        "victima_virt": dataclasses.replace(base, virt=True, victima=True),
-        "pom_virt": dataclasses.replace(base, virt=True, pom=True),
-        "isp": dataclasses.replace(base, virt=True, ideal_shadow=True),
-    }
-    return presets[system]
+def system_config(system: str):
+    """Named preset for an evaluated system (delegates to the registry)."""
+    return systems.config(system)
 
 
 def _key(system: str, workload: str, n: int, seed: int,
@@ -90,40 +51,121 @@ def _path(system, workload, n, seed, overrides):
     return os.path.join(CACHE_DIR, key + ".pkl")
 
 
+def _store(path: str, result) -> None:
+    """Atomic pickle write: an interrupted run leaves no truncated entry."""
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            pickle.dump(result, f)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def _load(path: str):
+    """Read a cache entry; unreadable entries count as missing.
+
+    Corrupt bytes from an interrupted legacy write (or stale pickles
+    referencing renamed modules) raise a grab-bag of exception types —
+    anything short of a successful load means "recompute".
+    """
+    try:
+        with open(path, "rb") as f:
+            return pickle.load(f)
+    except Exception:
+        return None
+
+
+def _cached(path: str, cache: bool):
+    return _load(path) if cache and os.path.exists(path) else None
+
+
+def _np_stats(st):
+    return type(st)(*[np.asarray(x) for x in st])
+
+
+def _stack_traces(gens, n: int) -> dict:
+    stacked = {
+        k: jnp.asarray(np.stack([g["trace"][k] for g in gens], axis=1))
+        for k in gens[0]["trace"]
+    }
+    stacked["ipa"] = jnp.asarray(
+        np.broadcast_to(
+            np.asarray([g["spec"].ipa for g in gens], np.float32),
+            (n, len(gens))))
+    return stacked
+
+
 def run_batch(system: str, workloads=None, n: int = 150_000, seed: int = 0,
               overrides: dict | None = None, cache: bool = True):
     """Simulate one system over ALL workloads in a single vmapped scan.
 
     Fills the per-(system, workload) disk cache; returns dict
-    workload → (stats, extras, spec).
+    workload -> (stats, extras, spec).
     """
     workloads = workloads or trace_gen.all_workloads()
-    missing = [w for w in workloads
-               if not (cache and os.path.exists(
-                   _path(system, w, n, seed, overrides)))]
     out = {}
+    missing = []
+    for w in workloads:
+        got = _cached(_path(system, w, n, seed, overrides), cache)
+        if got is None:
+            missing.append(w)
+        else:
+            out[w] = got
     if missing:
         gens = [trace_gen.generate(w, n=n, seed=seed) for w in missing]
         cfg = system_config(system)
         if overrides:
             cfg = dataclasses.replace(cfg, **overrides)
-        stacked = {
-            k: jnp.asarray(np.stack([g["trace"][k] for g in gens], axis=1))
-            for k in gens[0]["trace"]
-        }
-        stacked["ipa"] = jnp.asarray(
-            np.broadcast_to(
-                np.asarray([g["spec"].ipa for g in gens], np.float32),
-                (n, len(gens))))
-        per, extras = simulate_batch(cfg, stacked)
+        # overrides may change the composition (e.g. victima=True on
+        # radix): let make_step re-derive the stages from the final cfg
+        stage_names = None if overrides else systems.get(system).stages
+        per, extras = simulate_batch(cfg, _stack_traces(gens, n),
+                                     stage_names=stage_names)
         for w, g, st, ex in zip(missing, gens, per, extras):
-            st = type(st)(*[np.asarray(x) for x in st])
-            result = (st, ex, g["spec"])
-            with open(_path(system, w, n, seed, overrides), "wb") as f:
-                pickle.dump(result, f)
+            result = (_np_stats(st), ex, g["spec"])
+            _store(_path(system, w, n, seed, overrides), result)
+            out[w] = result
+    return {w: out[w] for w in workloads}
+
+
+def run_ladder(ladder: str = "l2tlb", workloads=None, n: int = 150_000,
+               seed: int = 0, cache: bool = True, members=None):
+    """Fill the cache for a whole system ladder in ONE compiled call.
+
+    All ladder members (e.g. the L2-TLB size ladder radix..128K+CACTI
+    variants) are vmapped over their Dyn sizing scalars and over the
+    workload axis, so the sweep pays a single compilation instead of one
+    per system.  `members` restricts the run to a subset of the ladder.
+    Returns dict system -> dict workload -> result, byte-compatible with
+    per-system ``run_batch`` results.
+    """
+    members = tuple(members or systems.LADDERS[ladder])
+    workloads = workloads or trace_gen.all_workloads()
+    out = {s: {} for s in members}
+    missing = []
     for w in workloads:
-        with open(_path(system, w, n, seed, overrides), "rb") as f:
-            out[w] = pickle.load(f)
+        got = {s: _cached(_path(s, w, n, seed, None), cache)
+               for s in members}
+        if all(r is not None for r in got.values()):
+            for s in members:
+                out[s][w] = got[s]
+        else:
+            missing.append(w)
+    if missing:
+        gens = [trace_gen.generate(w, n=n, seed=seed) for w in missing]
+        cfg = systems.ladder_base_config(ladder, members)
+        dyns = systems.ladder_dyn(members)
+        per, extras = simulate_systems(
+            cfg, dyns, _stack_traces(gens, n),
+            stage_names=systems.get(members[0]).stages)
+        for si, s in enumerate(members):
+            for wi, (w, g) in enumerate(zip(missing, gens)):
+                result = (_np_stats(per[si][wi]), extras[si][wi], g["spec"])
+                _store(_path(s, w, n, seed, None), result)
+                out[s][w] = result
     return out
 
 
@@ -134,9 +176,9 @@ def run(system: str, workload: str, n: int = 150_000, seed: int = 0,
     Results are cached on disk — the benchmark harness reruns cheaply.
     """
     path = _path(system, workload, n, seed, overrides)
-    if cache and os.path.exists(path):
-        with open(path, "rb") as f:
-            return pickle.load(f)
+    got = _cached(path, cache)
+    if got is not None:
+        return got
 
     gen = trace_gen.generate(workload, n=n, seed=seed)
     cfg = system_config(system)
@@ -146,10 +188,9 @@ def run(system: str, workload: str, n: int = 150_000, seed: int = 0,
     trace = {k: jnp.asarray(v) for k, v in gen["trace"].items()}
     trace["ipa"] = jnp.full((len(gen["trace"]["vpn"]),), gen["spec"].ipa,
                             jnp.float32)
-    stats, extras = simulate(cfg, trace)
-    stats = type(stats)(*[np.asarray(x) for x in stats])
-    result = (stats, extras, gen["spec"])
+    stage_names = None if overrides else systems.get(system).stages
+    stats, extras = simulate(cfg, trace, stage_names=stage_names)
+    result = (_np_stats(stats), extras, gen["spec"])
     if cache:
-        with open(path, "wb") as f:
-            pickle.dump(result, f)
+        _store(path, result)
     return result

@@ -1,16 +1,22 @@
-"""Populate the simulation result cache for every (system × workload) the
-benchmark suite needs.  Run as ``python -m repro.sim.sweep`` (hours on one
-core; results land in .sim_cache and benchmarks read them instantly).
+"""Populate the simulation result cache for every (system x workload) the
+benchmark suite needs.  Run as ``python -m repro.sim.sweep`` (results
+land in .sim_cache and benchmarks read them instantly).
+
+Shape-compatible system ladders (the L2-TLB size ladder incl. CACTI
+variants, the L3-TLB latency ladder) are filled by ONE compiled vmapped
+call each via ``run_ladder``; the remaining systems run through the
+per-system batched path.
 """
 from __future__ import annotations
 
+import os
 import sys
 import time
 
-from repro.sim import trace_gen
-from repro.sim.runner import run_batch
+from repro.sim import systems
+from repro.sim.runner import run_batch, run_ladder
 
-N = int(__import__("os").environ.get("REPRO_SIM_N", 150_000))
+N = int(os.environ.get("REPRO_SIM_N", 150_000))
 
 # priority order: paper-headline systems first so partial sweeps are useful
 SYSTEMS = [
@@ -46,13 +52,28 @@ SYSTEMS = [
 ]
 
 
-def main(systems=None):
-    systems = systems or SYSTEMS
+def main(selected=None):
+    selected = selected or SYSTEMS
     t00 = time.time()
-    for sysname in systems:
+    done: set[str] = set()
+    # batched ladders first: one compilation covers many systems.  A
+    # CLI-selected subset only simulates the selected members.
+    for ladder, members in systems.LADDERS.items():
+        todo = [s for s in members if s in selected]
+        if not todo:
+            continue
+        t0 = time.time()
+        run_ladder(ladder, n=N, members=todo)
+        done.update(todo)
+        print(f"[sweep] ladder:{ladder:>11s} x all  {time.time()-t0:7.1f}s "
+              f"({len(todo)} systems, 1 compile; "
+              f"total {time.time()-t00:7.0f}s)", flush=True)
+    for sysname in selected:
+        if sysname in done:
+            continue
         t0 = time.time()
         run_batch(sysname, n=N)
-        print(f"[sweep] {sysname:>18s} × all  {time.time()-t0:7.1f}s "
+        print(f"[sweep] {sysname:>18s} x all  {time.time()-t0:7.1f}s "
               f"(total {time.time()-t00:7.0f}s)", flush=True)
 
 

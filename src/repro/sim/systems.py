@@ -1,0 +1,175 @@
+"""Declarative registry of evaluated systems (paper Table 3 + ablations).
+
+Each ``System`` names its translation-pipeline stage composition (see
+repro.core.stages) plus the SimConfig overrides that size it.  Ladders
+group shape-compatible systems — systems whose configs differ only in
+``DYN_FIELDS`` (L2-TLB geometry/latency, L3-TLB latency) — which the
+sweep simulates in ONE compiled, vmapped call (mmu.simulate_systems).
+
+Adding a new translation scheme = writing a stage module + registering
+a System here; see docs/architecture.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.stages import DYN_FIELDS, Dyn, default_stages
+from repro.core.mmu import SimConfig
+
+# stage compositions (tuples shared across entries for readability)
+_RADIX = ("l1_tlb", "l2_tlb", "ptw")
+_VICTIMA = ("l1_tlb", "l2_tlb", "victima", "ptw")
+_L3 = ("l1_tlb", "l2_tlb", "l3_tlb", "ptw")
+_POM = ("l1_tlb", "l2_tlb", "pom", "ptw")
+_NP = ("l1_tlb", "l2_tlb", "ptw2d")
+_VICTIMA_NP = ("l1_tlb", "l2_tlb", "victima", "ptw2d")
+_POM_NP = ("l1_tlb", "l2_tlb", "pom", "ptw2d")
+
+
+@dataclasses.dataclass(frozen=True)
+class System:
+    """One evaluated system: stage composition + config overrides."""
+
+    name: str
+    stages: tuple[str, ...]
+    overrides: dict
+    desc: str = ""
+    tags: tuple[str, ...] = ()
+
+    def config(self, base: SimConfig | None = None) -> SimConfig:
+        return dataclasses.replace(base or SimConfig(), **self.overrides)
+
+
+REGISTRY: dict[str, System] = {}
+
+
+def register(name: str, stages: tuple[str, ...], desc: str = "",
+             tags: tuple[str, ...] = (), **overrides) -> System:
+    if name in REGISTRY:
+        raise ValueError(f"duplicate system {name!r}")
+    sys_ = System(name=name, stages=stages, overrides=overrides,
+                  desc=desc, tags=tags)
+    got = default_stages(sys_.config())
+    if stages != got:
+        raise ValueError(
+            f"system {name!r} declares stages {stages} but its config "
+            f"implies {got}")
+    REGISTRY[name] = sys_
+    return sys_
+
+
+def get(name: str) -> System:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown system {name!r}; registered: "
+                       f"{', '.join(sorted(REGISTRY))}") from None
+
+
+def config(name: str) -> SimConfig:
+    return get(name).config()
+
+
+def names(tag: str | None = None) -> list[str]:
+    return [n for n, s in REGISTRY.items() if tag is None or tag in s.tags]
+
+
+# --------------------------------------------------------------- native
+register("radix", _RADIX, "baseline 2-level TLB + 4-level radix PTW",
+         tags=("native", "l2tlb_ladder"))
+register("victima", _VICTIMA, "TLB blocks in L2$ + PTW-CP + TLB-aware SRRIP",
+         tags=("native", "headline"), victima=True)
+register("victima_agnostic", _VICTIMA, "Victima with TLB-agnostic SRRIP "
+         "(Fig. 26 ablation)", tags=("native", "ablation"),
+         victima=True, tlb_aware=False)
+register("victima_noptwcp", _VICTIMA, "Victima inserting every candidate "
+         "(no PTW-CP ablation)", tags=("native", "ablation"),
+         victima=True, use_ptwcp=False)
+register("pom", _POM, "64K-entry software-managed in-memory L3 TLB",
+         tags=("native",), pom=True)
+
+# optimistic large L2 TLBs (12-cycle regardless of size; Figs. 5-6)
+for _n, _sets, _ways in [("3k", 256, 12), ("8k", 512, 16),
+                         ("16k", 1024, 16), ("32k", 2048, 16),
+                         ("64k", 4096, 16), ("128k", 8192, 16)]:
+    register(f"l2tlb_{_n}", _RADIX, f"optimistic {_n}-entry L2 TLB",
+             tags=("native", "l2tlb_ladder"),
+             l2tlb_sets=_sets, l2tlb_ways=_ways)
+
+# realistic latencies from CACTI 7.0 (paper §3.1: 1.4x per 2x; Fig. 7)
+for _n, _sets, _lat in [("8k", 512, 17), ("16k", 1024, 23),
+                        ("32k", 2048, 30), ("64k", 4096, 39)]:
+    register(f"l2tlb_{_n}_real", _RADIX,
+             f"{_n}-entry L2 TLB at CACTI latency {_lat}c",
+             tags=("native", "l2tlb_ladder"),
+             l2tlb_sets=_sets, l2tlb_ways=16, l2tlb_lat=_lat)
+
+# hardware L3 TLB (64K entries) at various latencies (Fig. 8)
+for _lat in (15, 24, 39):
+    register(f"l3tlb_64k_{_lat}", _L3, f"64K-entry hardware L3 TLB @{_lat}c",
+             tags=("native", "l3tlb_ladder"),
+             l3tlb_sets=4096, l3tlb_lat=_lat)
+
+# L2 cache size sensitivity (Fig. 25): 1/4/8 MB
+for _n, _sets in [("1m", 1024), ("4m", 4096), ("8m", 8192)]:
+    register(f"victima_l2_{_n}", _VICTIMA, f"Victima with {_n}B L2 cache",
+             tags=("native", "sensitivity"), victima=True, l2_sets=_sets)
+    register(f"radix_l2_{_n}", _RADIX, f"radix with {_n}B L2 cache",
+             tags=("native", "sensitivity"), l2_sets=_sets)
+
+# Table 2 feature collection
+register("radix_collect", _RADIX, "radix + per-page feature collection",
+         tags=("native", "collect"), collect=True)
+
+# --------------------------------------------------------------- virtualized
+register("np", _NP, "nested paging: 2-D walk + nested TLB",
+         tags=("virt",), virt=True)
+register("victima_virt", _VICTIMA_NP, "Victima under nested paging "
+         "(gVA + nested TLB blocks in L2$)", tags=("virt", "headline"),
+         virt=True, victima=True)
+register("pom_virt", _POM_NP, "POM-TLB under nested paging",
+         tags=("virt",), virt=True, pom=True)
+register("isp", _RADIX, "ideal shadow paging: 1-D walk, free updates",
+         tags=("virt",), virt=True, ideal_shadow=True)
+
+
+# --------------------------------------------------------------- ladders
+
+LADDERS: dict[str, tuple[str, ...]] = {
+    "l2tlb": tuple(names("l2tlb_ladder")),
+    "l3tlb": tuple(names("l3tlb_ladder")),
+}
+
+
+def ladder_base_config(ladder: str, members=None) -> SimConfig:
+    """Static config for a ladder: structures at the ladder maximum.
+
+    Validates shape-compatibility — members may differ only in
+    DYN_FIELDS (everything else must match the first member).
+    """
+    members = members or LADDERS[ladder]
+    cfgs = [config(n) for n in members]
+    pinned = {f: getattr(cfgs[0], f) for f in DYN_FIELDS}
+    norm = {dataclasses.replace(c, **pinned) for c in cfgs}
+    if len(norm) != 1:
+        raise ValueError(
+            f"ladder {ladder!r} members differ beyond {DYN_FIELDS}")
+    return dataclasses.replace(
+        cfgs[0],
+        l2tlb_sets=max(c.l2tlb_sets for c in cfgs),
+        l2tlb_ways=max(c.l2tlb_ways for c in cfgs),
+    )
+
+
+def ladder_dyn(members) -> Dyn:
+    """Stacked per-system Dyn scalars ([S]-leaves) for ladder members."""
+    cfgs = [config(n) for n in members]
+    return Dyn(
+        l2tlb_set_mask=jnp.asarray([c.l2tlb_sets - 1 for c in cfgs],
+                                   jnp.int32),
+        l2tlb_ways=jnp.asarray([c.l2tlb_ways for c in cfgs], jnp.int32),
+        l2tlb_lat=jnp.asarray([c.l2tlb_lat for c in cfgs], jnp.int32),
+        l3tlb_lat=jnp.asarray([c.l3tlb_lat for c in cfgs], jnp.int32),
+    )

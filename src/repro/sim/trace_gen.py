@@ -12,6 +12,7 @@ PTE lines carry 8-page spatial clusters — the structure Victima exploits.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 
 import numpy as np
 
@@ -99,7 +100,9 @@ def generate(name: str, n: int = 400_000, seed: int = 0) -> dict:
              "n_pages4": int} with numpy arrays (callers jnp-ify).
     """
     spec = WORKLOADS[name]
-    rng = np.random.default_rng(seed + hash(name) % 65536)
+    # stable per-workload salt: str.hash() is process-salted, which made
+    # traces (and therefore disk-cached Stats) irreproducible across runs
+    rng = np.random.default_rng(seed + zlib.crc32(name.encode()) % 65536)
 
     n_pages = min(int(spec.footprint_gb * GB / PAGE4), MAX_PAGES4)
     # VA layout: first `n4` pages are 4K-backed, rest belong to 2M regions.

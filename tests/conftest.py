@@ -9,3 +9,11 @@ import jax
 jax.config.update("jax_compilation_cache_dir",
                   os.environ.get("JAX_CACHE", "/root/repo/.jax_cache"))
 jax.config.update("jax_persistent_cache_min_compile_time_secs", 5)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running tests (multi-device lowering subprocesses); "
+        "deselect with -m 'not slow'")
+

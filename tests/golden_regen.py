@@ -1,0 +1,38 @@
+"""Regenerate the golden Stats snapshot.
+
+Usage:  PYTHONPATH=src:tests python -m golden_regen
+
+Only rerun this when the simulator's *intended* behaviour changes; the
+whole point of the snapshot is to catch unintended drift during
+refactors.
+"""
+import dataclasses
+import json
+import os
+
+import jax.numpy as jnp
+
+from golden_trace import (GOLDEN_CFG, GOLDEN_SYSTEMS, golden_trace,
+                          stats_to_jsonable)
+from repro.core.mmu import simulate
+
+OUT = os.path.join(os.path.dirname(__file__), "golden", "mmu_stats.json")
+
+
+def main():
+    tr = {k: jnp.asarray(v) for k, v in golden_trace().items()}
+    snap = {}
+    for name, overrides in GOLDEN_SYSTEMS.items():
+        cfg = dataclasses.replace(GOLDEN_CFG, **overrides)
+        stats, _ = simulate(cfg, tr)
+        snap[name] = stats_to_jsonable(stats)
+        print(f"[golden] {name}: n_demand_ptw={snap[name]['n_demand_ptw']} "
+              f"sum_trans_cyc={snap[name]['sum_trans_cyc']}")
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump(snap, f, indent=1, sort_keys=True)
+    print(f"[golden] wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Shared fixture data for the golden-snapshot tests.
+
+The trace and config here pin the pre-refactor MMU behaviour: the stage
+pipeline must reproduce these Stats bit-for-bit (see
+tests/golden/mmu_stats.json, regenerated via
+``PYTHONPATH=src:tests python -m golden_regen``).
+"""
+import numpy as np
+
+from repro.core.mmu import SimConfig
+
+GOLDEN_SEED = 1234
+GOLDEN_N = 6000
+
+# tiny structures so each system compiles in seconds, yet every flow
+# (evictions, background walks, 2M pages, pressure) is exercised
+GOLDEN_CFG = SimConfig(
+    l2tlb_sets=4, l2tlb_ways=4,
+    l1d4_sets=2, l1d4_ways=2, l1d2_sets=2, l1d2_ways=2,
+    l2_sets=64, l2_ways=8, l3_sets=64, l3_ways=8,
+    n_pages4=1 << 12, n_pages2=1 << 8, n_pagesh=1 << 8, n_feat=1,
+)
+
+GOLDEN_SYSTEMS = {
+    "radix": {},
+    "victima": {"victima": True},
+}
+
+
+def golden_trace(n: int = GOLDEN_N, seed: int = GOLDEN_SEED) -> dict:
+    """Deterministic mixed trace: half cyclic sweep (TLB-thrashing but
+    Victima-friendly), half random, 25% 2M-backed accesses."""
+    rng = np.random.default_rng(seed)
+    base = rng.integers(0, 4096, size=n)
+    cyc = np.tile(np.arange(512), n // 512 + 1)[:n]
+    pages = np.where(rng.random(n) < 0.5, cyc, base).astype(np.int32)
+    return {
+        "vpn": pages,
+        "is2m": rng.random(n) < 0.25,
+        "line": (pages * 64 + rng.integers(0, 64, size=n)).astype(np.int32),
+        "ipa": np.full((n,), 3.0, np.float32),
+    }
+
+
+def stats_to_jsonable(stats) -> dict:
+    out = {}
+    for name, v in stats._asdict().items():
+        a = np.asarray(v)
+        if a.ndim == 0:
+            out[name] = a.item()
+        else:
+            out[name] = a.tolist()
+    return out

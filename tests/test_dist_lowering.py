@@ -11,6 +11,10 @@ import textwrap
 
 import pytest
 
+# the distribution layer is not part of this tree yet; these lowering
+# tests resume automatically once a PR adds repro.dist
+pytest.importorskip("repro.dist", reason="repro.dist not in tree")
+
 ENV = dict(os.environ,
            XLA_FLAGS="--xla_force_host_platform_device_count=8",
            PYTHONPATH="src",

@@ -1,5 +1,8 @@
 """Hypothesis property tests on the system's core invariants."""
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np

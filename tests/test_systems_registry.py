@@ -1,0 +1,131 @@
+"""System-registry coverage + golden-snapshot pipeline equivalence.
+
+- every registered system constructs and simulates a ~2k-access trace
+  without NaNs (systems sharing a tiny config + composition are
+  simulated once — identical config => identical simulation);
+- the stage pipeline reproduces the pre-refactor monolithic MMU's Stats
+  bit-for-bit on a fixed seed (tests/golden/mmu_stats.json);
+- a batched (vmapped) ladder run is bit-identical to per-system runs.
+"""
+import dataclasses
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from golden_trace import (GOLDEN_CFG, GOLDEN_SYSTEMS, golden_trace,
+                          stats_to_jsonable)
+from repro.core.mmu import simulate, simulate_systems
+from repro.core.stages import (Dyn, STAGES, WALK_STAGES, default_stages,
+                               make_state)
+from repro.sim import systems
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
+                           "mmu_stats.json")
+
+# shrink every structure so each distinct composition compiles in seconds
+_TINY = dict(
+    l2tlb_sets=4, l2tlb_ways=4,
+    l1d4_sets=2, l1d4_ways=2, l1d2_sets=2, l1d2_ways=2,
+    l2_sets=64, l2_ways=8, l3_sets=64, l3_ways=8,
+    n_pages4=1 << 12, n_pages2=1 << 8, n_pagesh=1 << 8, n_feat=1 << 10,
+)
+
+
+def _tiny_config(name):
+    cfg = dataclasses.replace(systems.config(name), **_TINY)
+    if cfg.l3tlb_sets > 0:
+        cfg = dataclasses.replace(cfg, l3tlb_sets=16, l3tlb_ways=4)
+    if cfg.pom:
+        cfg = dataclasses.replace(cfg, pom_sets=16, pom_ways=4)
+    return cfg
+
+
+def test_registry_compositions_are_canonical():
+    assert len(systems.REGISTRY) >= 29
+    for name, sys_ in systems.REGISTRY.items():
+        assert sys_.stages == default_stages(sys_.config()), name
+        assert sys_.stages[-1] in WALK_STAGES, name
+        assert all(s in STAGES for s in sys_.stages), name
+
+
+def test_ladders_are_shape_compatible():
+    for ladder, members in systems.LADDERS.items():
+        assert len(members) >= 3, ladder
+        base = systems.ladder_base_config(ladder)
+        dyns = systems.ladder_dyn(members)
+        assert np.asarray(dyns.l2tlb_set_mask).shape == (len(members),)
+        # base allocation covers every member's live geometry
+        for m in members:
+            c = systems.config(m)
+            assert c.l2tlb_sets <= base.l2tlb_sets, m
+            assert c.l2tlb_ways <= base.l2tlb_ways, m
+
+
+def test_every_system_constructs():
+    for name in systems.names():
+        st = make_state(_tiny_config(name))
+        assert int(st.now) == 0, name
+
+
+@pytest.fixture(scope="module")
+def tiny_trace():
+    return {k: jnp.asarray(v) for k, v in golden_trace(n=2000).items()}
+
+
+def test_every_system_simulates_without_nans(tiny_trace):
+    by_cfg = {}
+    for name in systems.names():
+        key = (_tiny_config(name), systems.get(name).stages)
+        by_cfg.setdefault(key, []).append(name)
+    for (cfg, stage_names), group in by_cfg.items():
+        stats, extras = simulate(cfg, tiny_trace, stage_names=stage_names)
+        for field, v in zip(stats._fields, stats):
+            arr = np.asarray(v)
+            assert np.all(np.isfinite(arr)), (group, field)
+        assert int(stats.n_access) == 2000, group
+        assert int(stats.n_demand_ptw) > 0, group
+        assert float(stats.sum_trans_cyc) > 0, group
+
+
+def test_pipeline_matches_golden_snapshot():
+    """The refactored stage pipeline must reproduce the pre-refactor
+    monolithic make_step Stats bit-for-bit (fixed seed)."""
+    with open(GOLDEN_PATH) as f:
+        snap = json.load(f)
+    tr = {k: jnp.asarray(v) for k, v in golden_trace().items()}
+    for name, overrides in GOLDEN_SYSTEMS.items():
+        cfg = dataclasses.replace(GOLDEN_CFG, **overrides)
+        stats, _ = simulate(cfg, tr)
+        got = stats_to_jsonable(stats)
+        for field, want in snap[name].items():
+            assert got[field] == want, (name, field, got[field], want)
+
+
+def test_batched_ladder_matches_single_runs(tiny_trace):
+    """vmapped multi-system sweep == per-system static runs, bit-for-bit
+    (covers set-masking, way-limiting, and dynamic latency)."""
+    variants = [dict(l2tlb_sets=8, l2tlb_ways=4, l2tlb_lat=12),
+                dict(l2tlb_sets=16, l2tlb_ways=4, l2tlb_lat=17),
+                dict(l2tlb_sets=16, l2tlb_ways=8, l2tlb_lat=23)]
+    base = dataclasses.replace(GOLDEN_CFG, l2tlb_sets=16, l2tlb_ways=8)
+    dyns = Dyn(
+        l2tlb_set_mask=jnp.asarray(
+            [v["l2tlb_sets"] - 1 for v in variants], jnp.int32),
+        l2tlb_ways=jnp.asarray(
+            [v["l2tlb_ways"] for v in variants], jnp.int32),
+        l2tlb_lat=jnp.asarray(
+            [v["l2tlb_lat"] for v in variants], jnp.int32),
+        l3tlb_lat=jnp.asarray([base.l3tlb_lat] * len(variants), jnp.int32),
+    )
+    traces = {k: jnp.stack([v, v], axis=1) for k, v in tiny_trace.items()}
+    per, extras = simulate_systems(base, dyns, traces)
+    for si, v in enumerate(variants):
+        ref, _ = simulate(dataclasses.replace(GOLDEN_CFG, **v), tiny_trace)
+        for field, a, b in zip(ref._fields, ref, per[si][0]):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), (si, field)
+        # both workload lanes saw the same trace -> identical stats
+        assert np.array_equal(np.asarray(per[si][0].n_demand_ptw),
+                              np.asarray(per[si][1].n_demand_ptw))
