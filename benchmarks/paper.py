@@ -20,7 +20,10 @@ WLS = trace_gen.all_workloads()
 N = int(__import__("os").environ.get("REPRO_SIM_N", 150_000))
 
 # systems covered by a batched (vmapped) ladder run: the first _sys()
-# touching a ladder member fills the whole ladder in one compilation
+# touching a ladder member fills the whole ladder in one compilation.
+# Ladders are auto-discovered from the registry (systems.LADDERS), so
+# every member of e.g. the 18-system radix/victima family — including
+# the whole Fig. 25 L2-cache-size family — takes the batched path.
 _LADDER_OF = {s: lad for lad, members in systems.LADDERS.items()
               for s in members}
 

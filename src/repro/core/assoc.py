@@ -136,16 +136,26 @@ def insert_lru_dyn(a: Assoc, key: jax.Array, now: jax.Array,
 
 # ---------------------------------------------------------------- SRRIP
 
-def srrip_age_and_pick(rrpv_row: jax.Array, valid_row: jax.Array):
+def srrip_age_and_pick(rrpv_row: jax.Array, valid_row: jax.Array,
+                       way_ok: jax.Array | None = None):
     """Age the row so at least one way reaches RRIP_MAX and pick a victim.
 
-    Invalid ways are preferred (treated as RRPV=+inf).  Returns
+    Invalid ways are preferred (treated as RRPV=+inf).  `way_ok` (bool
+    per way, optional) restricts both the aging max and the victim pick
+    to a dynamically sized view's live ways: masked-off ways contribute
+    -1 (they never dominate the max and never win the argmax), which
+    keeps the view bit-identical to a statically smaller row.  Returns
     (aged_row, victim_way).
     """
     eff = jnp.where(valid_row, rrpv_row, jnp.int32(RRIP_MAX + 1))
+    if way_ok is not None:
+        eff = jnp.where(way_ok, eff, jnp.int32(-1))
     bump = jnp.maximum(RRIP_MAX - jnp.max(eff), 0)
     aged = jnp.where(valid_row, rrpv_row + bump, rrpv_row)
-    victim = jnp.argmax(jnp.where(valid_row, aged, jnp.int32(RRIP_MAX + 1)))
+    pick = jnp.where(valid_row, aged, jnp.int32(RRIP_MAX + 1))
+    if way_ok is not None:
+        pick = jnp.where(way_ok, pick, jnp.int32(-1))
+    victim = jnp.argmax(pick)
     return aged, victim
 
 
@@ -154,6 +164,7 @@ def srrip_victim_tlb_aware(
     valid_row: jax.Array,
     is_tlb_row: jax.Array,
     pressure: jax.Array,
+    way_ok: jax.Array | None = None,
 ):
     """Paper Listing 1 `chooseReplacementCandidate`.
 
@@ -162,9 +173,11 @@ def srrip_victim_tlb_aware(
     If none exists the TLB block is evicted after all.
     Returns (aged_row, victim_way).
     """
-    aged, v0 = srrip_age_and_pick(rrpv_row, valid_row)
+    aged, v0 = srrip_age_and_pick(rrpv_row, valid_row, way_ok)
     # invalid ways already won in v0 if present
     non_tlb_max = valid_row & (~is_tlb_row) & (aged >= RRIP_MAX)
+    if way_ok is not None:
+        non_tlb_max = non_tlb_max & way_ok
     have_alt = jnp.any(non_tlb_max)
     v1 = jnp.argmax(non_tlb_max)
     reroll = pressure & valid_row[v0] & is_tlb_row[v0] & have_alt

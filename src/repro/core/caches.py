@@ -36,6 +36,32 @@ BT_DATA, BT_TLB4, BT_TLB2, BT_NTLB = 0, 1, 2, 3
 REUSE_BUCKETS = 22  # reuse counts 0..20, bucket 21 = ">20" overflow
 
 
+class L2Geom(NamedTuple):
+    """Traced view geometry of a dynamically sized L2 cache.
+
+    A ladder-batched run allocates the L2 at the ladder's maximum static
+    shape; each member's live geometry is a set mask plus an effective
+    way count.  Because every insert masks its set index and restricts
+    victim selection to ways below ``n_ways``, the view is bit-identical
+    to a statically allocated (live_sets, n_ways) cache — the invariant
+    the ladder-equivalence tests pin.  ``geom=None`` everywhere below
+    selects the static path (identical compiled code to pre-Dyn days).
+    """
+
+    set_mask: jax.Array  # int32 = live sets - 1
+    n_ways: jax.Array    # int32 effective ways
+
+
+def _l2_set(l2: "L2Cache", key: jax.Array, geom: L2Geom | None):
+    return set_index(key, l2.n_sets) if geom is None else key & geom.set_mask
+
+
+def _way_ok(l2: "L2Cache", geom: L2Geom | None):
+    if geom is None:
+        return None
+    return jnp.arange(l2.tags.shape[1]) < geom.n_ways
+
+
 class L2Cache(NamedTuple):
     tags: jax.Array    # int32 [S, W]
     valid: jax.Array   # bool  [S, W]
@@ -69,8 +95,11 @@ def make_l2(n_sets: int, n_ways: int) -> L2Cache:
     )
 
 
-def l2_lookup(l2: L2Cache, key: jax.Array, btype: int):
-    s = set_index(key, l2.n_sets)
+def l2_lookup(l2: L2Cache, key: jax.Array, btype,
+              geom: L2Geom | None = None):
+    s = _l2_set(l2, key, geom)
+    # no way mask needed on probe: inserts never touch ways past the
+    # view's limit, so those ways are never valid
     hits = l2.valid[s] & (l2.tags[s] == key) & (l2.btype[s] == btype)
     return jnp.any(hits), jnp.argmax(hits), s
 
@@ -128,6 +157,7 @@ def l2_insert(
     pressure: jax.Array,
     tlb_aware: bool,
     enable,
+    geom: L2Geom | None = None,
 ) -> L2Cache:
     """Insert a block (Listing 1 `insertBlockInL2` + victim selection).
 
@@ -137,13 +167,15 @@ def l2_insert(
     """
     en = jnp.asarray(enable)
     btype = jnp.asarray(btype, jnp.int32)
-    s = set_index(key, l2.n_sets)
+    s = _l2_set(l2, key, geom)
+    way_ok = _way_ok(l2, geom)
     row_rrpv, row_valid = l2.rrpv[s], l2.valid[s]
     row_is_tlb = l2.btype[s] != BT_DATA
     if tlb_aware:
-        aged, w = srrip_victim_tlb_aware(row_rrpv, row_valid, row_is_tlb, pressure)
+        aged, w = srrip_victim_tlb_aware(row_rrpv, row_valid, row_is_tlb,
+                                         pressure, way_ok)
     else:
-        aged, w = srrip_age_and_pick(row_rrpv, row_valid)
+        aged, w = srrip_age_and_pick(row_rrpv, row_valid, way_ok)
 
     l2 = _account_evict(l2, s, w, en)
     ins_is_tlbish = btype != BT_DATA
@@ -169,6 +201,7 @@ def l2_retag_to_tlb(
     pressure: jax.Array,
     tlb_aware: bool,
     enable,
+    geom: L2Geom | None = None,
 ) -> L2Cache:
     """Victima §5.2: transform the cache line holding the fetched leaf PTEs
     into a TLB block, *unless* one already exists for this region.
@@ -178,13 +211,14 @@ def l2_retag_to_tlb(
     as an insert at set(key) — behaviourally identical.)
     """
     # check for an existing TLB block of this region+type (§5.2 step 2)
-    s = set_index(key, l2.n_sets)
+    s = _l2_set(l2, key, geom)
     btype_arr = jnp.asarray(btype, jnp.int32)
     exists = jnp.any(
         l2.valid[s] & (l2.tags[s] == key) & (l2.btype[s] == btype_arr)
     )
     return l2_insert(
-        l2, key, btype, pressure, tlb_aware, jnp.asarray(enable) & ~exists
+        l2, key, btype, pressure, tlb_aware,
+        jnp.asarray(enable) & ~exists, geom,
     )
 
 
@@ -243,26 +277,27 @@ class Lat(NamedTuple):
 
 
 def access_data(h: Hier, line: jax.Array, now: jax.Array,
-                pressure: jax.Array, tlb_aware: bool, lat: Lat):
+                pressure: jax.Array, tlb_aware: bool, lat: Lat,
+                geom: L2Geom | None = None):
     """Demand data access L1D→L2→L3→DRAM with fills. Returns (h, cycles)."""
     hit1, w1, s1 = lookup(h.l1d, line)
     h = h._replace(l1d=touch_lru(h.l1d, s1, w1, now))
 
-    hit2, w2, s2 = l2_lookup(h.l2, line, BT_DATA)
+    hit2, w2, s2 = l2_lookup(h.l2, line, BT_DATA, geom)
     go_l2 = ~hit1
     l2c = l2_touch(h.l2, s2, w2, pressure, tlb_aware, go_l2 & hit2)
 
     go_l3 = go_l2 & ~hit2
     l3c, hit3 = l3_access(h.l3, line, go_l3)
     # fill L2 on L2 miss (from L3 or DRAM)
-    l2c = l2_insert(l2c, line, BT_DATA, pressure, tlb_aware, go_l3)
+    l2c = l2_insert(l2c, line, BT_DATA, pressure, tlb_aware, go_l3, geom)
     # stream prefetcher at L2 (Table 3): next-line fill on L2 miss.
     # This is what keeps PT/PTE lines from squatting in the L2 under
     # data-intensive streams (PTW latencies match the paper's Fig. 4).
     nxt = line + 1
-    pf_hit, _, _ = l2_lookup(l2c, nxt, BT_DATA)
+    pf_hit, _, _ = l2_lookup(l2c, nxt, BT_DATA, geom)
     l2c = l2_insert(l2c, nxt, BT_DATA, pressure, tlb_aware,
-                    go_l3 & ~pf_hit)
+                    go_l3 & ~pf_hit, geom)
     # fill L1D on any L1 miss
     l1c, _, _ = insert_lru(h.l1d, line, now, go_l2)
 
@@ -278,7 +313,7 @@ def access_data(h: Hier, line: jax.Array, now: jax.Array,
         bg_line = ((now * jnp.int32(-1640531527)) ^ salt) & ((1 << 26) - 1)
         l3c, bg_hit3 = l3_access(l3c, bg_line, True)
         l2c = l2_insert(l2c, bg_line, BT_DATA, pressure, tlb_aware,
-                        ~bg_hit3)
+                        ~bg_hit3, geom)
 
     cycles = jnp.where(
         hit1, lat.l1d,
@@ -295,17 +330,18 @@ def access_data(h: Hier, line: jax.Array, now: jax.Array,
 
 
 def access_pte(h: Hier, line: jax.Array, pressure: jax.Array,
-               tlb_aware: bool, lat: Lat, enable, bt: int = BT_DATA):
+               tlb_aware: bool, lat: Lat, enable, bt: int = BT_DATA,
+               geom: L2Geom | None = None):
     """Page-table-walker access (starts at L2). Returns (h, cycles, dram).
 
     `bt` lets POM-TLB lines be typed as TLB blocks so the TLB-aware SRRIP
     prioritizes them (Table 3: POM-TLB uses the §5.1 policy)."""
     en = jnp.asarray(enable)
-    hit2, w2, s2 = l2_lookup(h.l2, line, bt)
+    hit2, w2, s2 = l2_lookup(h.l2, line, bt, geom)
     l2c = l2_touch(h.l2, s2, w2, pressure, tlb_aware, en & hit2)
     go_l3 = en & ~hit2
     l3c, hit3 = l3_access(h.l3, line, go_l3)
-    l2c = l2_insert(l2c, line, bt, pressure, tlb_aware, go_l3)
+    l2c = l2_insert(l2c, line, bt, pressure, tlb_aware, go_l3, geom)
     dram = go_l3 & ~hit3
     cycles = jnp.where(
         en,

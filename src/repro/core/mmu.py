@@ -24,8 +24,8 @@ import jax.numpy as jnp
 from repro.core.caches import BT_DATA, access_data
 from repro.core.stages import (Dyn, Feats, MMUState, Request, STAGES,
                                SimConfig, Stats, WALK_HIST_BUCKETS,
-                               default_stages, fill_order, make_state,
-                               validate_stages)
+                               default_stages, fill_order, l2_geom_of,
+                               make_state, validate_stages)
 from repro.core.stages.fold import accum_stats, collect_feats
 
 __all__ = [
@@ -49,6 +49,7 @@ def make_step(cfg: SimConfig, stage_names=None, dyn: Dyn | None = None):
     fills = [STAGES[n] for n in fill_order(names)]
     pressure_thr = jnp.float32(cfg.pressure_mpki)
     bypass_thr = jnp.float32(cfg.bypass_l2mpki)
+    geom = l2_geom_of(dyn)  # dynamic L2-cache view (None = static)
 
     def step(st: MMUState, acc):
         vpn = acc["vpn"]
@@ -94,7 +95,7 @@ def make_step(cfg: SimConfig, stage_names=None, dyn: Dyn | None = None):
 
         # ---------------- the data access itself
         hier, dcyc = access_data(st.hier, req.line, now, pressure,
-                                 cfg.tlb_aware, cfg.lat)
+                                 cfg.tlb_aware, cfg.lat, geom)
         st = st._replace(hier=hier)
 
         st = st._replace(stats=accum_stats(s0, st, out, walk_res,
@@ -183,13 +184,14 @@ def simulate_systems(cfg: SimConfig, dyns: Dyn, traces: dict,
     `cfg` is the ladder's static base config (structures allocated at the
     ladder maximum); `dyns` has [S]-shaped leaves of per-system sizing
     scalars; traces leaves are [T, W, ...] (shared across systems).
-    Returns (list[S] of list[W] Stats, matching extras).
+    When more than one device is visible and S divides evenly, the system
+    axis is sharded across devices (`jax.pmap`); otherwise everything
+    vmaps on one device.  Returns (list[S] of list[W] Stats, extras).
     """
     S = jax.tree.leaves(dyns)[0].shape[0]
     W = jax.tree.leaves(traces)[0].shape[1]
 
-    @jax.jit
-    def run(d, tr):
+    def run_systems(d, tr):
         base = make_state(cfg)
         st0 = jax.tree.map(
             lambda x: jnp.broadcast_to(x, (W,) + x.shape), base)
@@ -204,7 +206,18 @@ def simulate_systems(cfg: SimConfig, dyns: Dyn, traces: dict,
 
         return jax.vmap(one_system)(d)
 
-    stats, l2a, l2m, hd, ht, feats, pc4 = run(dyns, traces)
+    n_dev = jax.local_device_count()
+    if n_dev > 1 and S % n_dev == 0:
+        # device-sharded system axis: [S] -> [n_dev, S/n_dev], traces
+        # replicated; outputs fold back to a flat [S, W, ...] layout
+        sharded = jax.tree.map(
+            lambda x: x.reshape((n_dev, S // n_dev) + x.shape[1:]), dyns)
+        out = jax.pmap(run_systems, in_axes=(0, None))(sharded, traces)
+        out = jax.tree.map(
+            lambda x: x.reshape((S,) + x.shape[2:]), out)
+    else:
+        out = jax.jit(run_systems)(dyns, traces)
+    stats, l2a, l2m, hd, ht, feats, pc4 = out
     stats = jax.tree.map(jax.device_get, stats)
     per = [[jax.tree.map(lambda x, s=s, w=w: x[s, w], stats)
             for w in range(W)] for s in range(S)]

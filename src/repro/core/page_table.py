@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.assoc import Assoc, insert_lru, lookup, make
-from repro.core.caches import Hier, Lat, access_pte
+from repro.core.caches import Hier, L2Geom, Lat, access_pte
 
 # line-id bases (disjoint regions; all < 2^30, int32-safe).
 # Data lines occupy [0, 2^29): footprints up to 2^23 4K pages × 64 lines.
@@ -87,12 +87,14 @@ def walk(
     tlb_aware: bool,
     lat: Lat,
     enable,
+    geom: L2Geom | None = None,
 ):
     """One native (or guest-PT-only) radix walk.
 
     Returns (hier, pwcs, cycles, n_dram).  `cycles` includes the PWC probe.
     All state updates are masked by `enable` (background walks pass True
-    but callers discard `cycles`).
+    but callers discard `cycles`).  `geom` is the dynamic L2-cache view
+    for ladder-batched runs (None = static geometry).
     """
     en = jnp.asarray(enable)
     vpn2 = vpn4k >> 9
@@ -129,7 +131,8 @@ def walk(
     n_dram = jnp.int32(0)
     for slot in range(4):
         slot_en = en & (slot >= start) & (slot < n_levels)
-        h, c, d = access_pte(h, lines[slot], pressure, tlb_aware, lat, slot_en)
+        h, c, d = access_pte(h, lines[slot], pressure, tlb_aware, lat,
+                             slot_en, geom=geom)
         cycles = cycles + c
         n_dram = n_dram + d.astype(jnp.int32)
 
@@ -141,7 +144,8 @@ def walk(
 
 
 def host_walk(h: Hier, gpn: jax.Array, pressure: jax.Array,
-              tlb_aware: bool, lat: Lat, enable):
+              tlb_aware: bool, lat: Lat, enable,
+              geom: L2Geom | None = None):
     """Host-PT walk (virt., no PWCs — paper Fig. 3 gives the host walker a
     nested TLB instead). 4 sequential PTE-line accesses through the caches.
     Returns (hier, cycles, n_dram, leaf_line)."""
@@ -150,7 +154,7 @@ def host_walk(h: Hier, gpn: jax.Array, pressure: jax.Array,
     cycles = jnp.int32(0)
     n_dram = jnp.int32(0)
     for ln in lines:
-        h, c, d = access_pte(h, ln, pressure, tlb_aware, lat, en)
+        h, c, d = access_pte(h, ln, pressure, tlb_aware, lat, en, geom=geom)
         cycles = cycles + c
         n_dram = n_dram + d.astype(jnp.int32)
     return h, cycles, n_dram, lines[3]

@@ -11,7 +11,8 @@ from __future__ import annotations
 from repro.core.stages.base import (DYN_FIELDS, Dyn, Feats, MMUState,
                                     Request, SimConfig, Stage, StageResult,
                                     Stats, WALK_HIST_BUCKETS, dyn_of,
-                                    make_state, zero_feats, zero_stats)
+                                    l2_geom_of, make_state, zero_feats,
+                                    zero_stats)
 from repro.core.stages.l1_tlb import L1TLBStage
 from repro.core.stages.l2_tlb import L2TLBStage
 from repro.core.stages.l3_tlb import L3TLBStage
@@ -72,6 +73,6 @@ def fill_order(names: tuple[str, ...]) -> tuple[str, ...]:
 __all__ = [
     "DYN_FIELDS", "Dyn", "Feats", "MMUState", "Request", "STAGES",
     "SimConfig", "Stage", "StageResult", "Stats", "WALK_HIST_BUCKETS",
-    "WALK_STAGES", "default_stages", "dyn_of", "fill_order", "make_state",
-    "validate_stages", "zero_feats", "zero_stats",
+    "WALK_STAGES", "default_stages", "dyn_of", "fill_order", "l2_geom_of",
+    "make_state", "validate_stages", "zero_feats", "zero_stats",
 ]

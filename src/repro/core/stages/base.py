@@ -34,7 +34,7 @@ import jax.numpy as jnp
 
 from repro.core import ptwcp
 from repro.core.assoc import Assoc, make
-from repro.core.caches import Hier, Lat, make_hier
+from repro.core.caches import Hier, L2Geom, Lat, make_hier
 from repro.core.page_table import PWCs, make_pwcs
 
 WALK_HIST_BUCKETS = 64  # 10-cycle buckets for the Fig.4 PTW latency CDF
@@ -104,9 +104,18 @@ class Dyn(NamedTuple):
     l2tlb_ways: jax.Array      # int32 effective ways
     l2tlb_lat: jax.Array       # int32 probe latency
     l3tlb_lat: jax.Array       # int32 probe latency (unused if no L3 TLB)
+    l2_set_mask: jax.Array     # int32, = live L2-cache sets - 1
+    l2_ways: jax.Array         # int32 effective L2-cache ways
+    victima_en: jax.Array      # bool — Victima stage live on this lane
+    #   (lets a radix member ride a victima-composition ladder with the
+    #    TLB-block installs and background walks masked off bit-exactly)
 
 
-DYN_FIELDS = ("l2tlb_sets", "l2tlb_ways", "l2tlb_lat", "l3tlb_lat")
+# SimConfig fields a batched ladder may vary across members.  "victima"
+# is special: it is not a geometry scalar but a dyn-*gateable* stage flag
+# (see systems.DYN_GATED_STAGES).
+DYN_FIELDS = ("l2tlb_sets", "l2tlb_ways", "l2tlb_lat", "l3tlb_lat",
+              "l2_sets", "l2_ways", "victima")
 
 
 def dyn_of(cfg: SimConfig) -> Dyn:
@@ -116,7 +125,17 @@ def dyn_of(cfg: SimConfig) -> Dyn:
         l2tlb_ways=jnp.int32(cfg.l2tlb_ways),
         l2tlb_lat=jnp.int32(cfg.l2tlb_lat),
         l3tlb_lat=jnp.int32(cfg.l3tlb_lat),
+        l2_set_mask=jnp.int32(cfg.l2_sets - 1),
+        l2_ways=jnp.int32(cfg.l2_ways),
+        victima_en=jnp.bool_(cfg.victima),
     )
+
+
+def l2_geom_of(dyn: "Dyn | None") -> L2Geom | None:
+    """The dynamic L2-cache view carried by a request (None = static)."""
+    if dyn is None:
+        return None
+    return L2Geom(set_mask=dyn.l2_set_mask, n_ways=dyn.l2_ways)
 
 
 class Stats(NamedTuple):

@@ -15,13 +15,18 @@ from repro.core.caches import (BT_NTLB, access_pte, l2_lookup,
                                l2_retag_to_tlb, l2_touch)
 from repro.core.page_table import (PWC_LAT, PWCs, _level_lines_2m,
                                    _level_lines_4k, host_walk)
-from repro.core.stages.base import Stage, StageResult, hash_h
+from repro.core.stages.base import Stage, StageResult, hash_h, l2_geom_of
 from repro.core.stages.ptw import fill_walk_counters
 
 
-def nested_translate(cfg, st, gpn, pressure, l2_bypass, enable):
+def nested_translate(cfg, st, gpn, pressure, l2_bypass, enable,
+                     geom=None, ven=None):
     """gPA-page -> hPA (virt.): nested TLB -> [Victima nested-TLB block] ->
-    host walk.  Returns (st, cycles, host_walked, ntlb_hit, nvictima_hit)."""
+    host walk.  Returns (st, cycles, host_walked, ntlb_hit, nvictima_hit).
+
+    `geom` is the dynamic L2-cache view for ladder-batched runs; `ven`
+    (None = static) gates the Victima nested-TLB-block machinery per
+    lane, bit-exactly reproducing a plain-NP system when off."""
     en = jnp.asarray(enable)
     hit_n, w_n, s_n = lookup(st.ntlb, gpn)
     ntlb = st.ntlb._replace(
@@ -36,8 +41,10 @@ def nested_translate(cfg, st, gpn, pressure, l2_bypass, enable):
 
     # Victima: probe L2 cache for a nested TLB block
     if cfg.victima:
-        vh, vw, vs = l2_lookup(st.hier.l2, gpn >> 3, BT_NTLB)
+        vh, vw, vs = l2_lookup(st.hier.l2, gpn >> 3, BT_NTLB, geom)
         vhit = miss & vh
+        if ven is not None:
+            vhit = vhit & ven
         l2c = l2_touch(st.hier.l2, vs, vw, pressure, cfg.tlb_aware, vhit)
         st = st._replace(hier=st.hier._replace(l2=l2c))
         cycles = cycles + jnp.where(vhit, cfg.lat.l2, 0)
@@ -46,7 +53,7 @@ def nested_translate(cfg, st, gpn, pressure, l2_bypass, enable):
 
     need_walk = miss & ~vhit
     hier, wc, ndram, _leaf = host_walk(
-        st.hier, gpn, pressure, cfg.tlb_aware, cfg.lat, need_walk
+        st.hier, gpn, pressure, cfg.tlb_aware, cfg.lat, need_walk, geom
     )
     st = st._replace(hier=hier)
     cycles = cycles + wc
@@ -59,8 +66,10 @@ def nested_translate(cfg, st, gpn, pressure, l2_bypass, enable):
         pred = ptwcp.predict_page(pch, hidx) if cfg.use_ptwcp \
             else jnp.bool_(True)
         ins = need_walk & (pred | l2_bypass)
+        if ven is not None:
+            ins = ins & ven
         l2c = l2_retag_to_tlb(st.hier.l2, gpn >> 3, BT_NTLB, pressure,
-                              cfg.tlb_aware, ins)
+                              cfg.tlb_aware, ins, geom)
         st = st._replace(hier=st.hier._replace(l2=l2c))
 
     # refill nested TLB; evicted nested entry triggers background host walk
@@ -71,17 +80,20 @@ def nested_translate(cfg, st, gpn, pressure, l2_bypass, enable):
         epred = ptwcp.predict_page(st.pch, eidx) if cfg.use_ptwcp \
             else jnp.bool_(True)
         bg = miss & ev_valid & (epred | l2_bypass)
+        if ven is not None:
+            bg = bg & ven
         hier, _, bdram, _ = host_walk(st.hier, ev_tag, pressure,
-                                      cfg.tlb_aware, cfg.lat, bg)
+                                      cfg.tlb_aware, cfg.lat, bg, geom)
         pch = ptwcp.update_counters(st.pch, eidx, bdram >= 1, bg)
         l2c = l2_retag_to_tlb(hier.l2, ev_tag >> 3, BT_NTLB, pressure,
-                              cfg.tlb_aware, bg)
+                              cfg.tlb_aware, bg, geom)
         st = st._replace(hier=hier._replace(l2=l2c), pch=pch)
 
     return st, cycles, need_walk, en & hit_n, vhit
 
 
-def guest_walk_2d(cfg, st, vpn, is2m, pressure, l2_bypass, enable):
+def guest_walk_2d(cfg, st, vpn, is2m, pressure, l2_bypass, enable,
+                  geom=None, ven=None):
     """Nested-paging 2-D walk: every guest-PT access first resolves its own
     gPA->hPA via ``nested_translate``.  Returns (st, cycles, n_dram,
     n_host_walks, n_ntlb_hits, n_nvictima_hits)."""
@@ -116,13 +128,14 @@ def guest_walk_2d(cfg, st, vpn, is2m, pressure, l2_bypass, enable):
         slot_en = en & (slot >= start) & (slot < n_levels)
         # translate the guest-PT line's gPA page first
         st, ncyc, walked, nth, nvh = nested_translate(
-            cfg, st, lines[slot] >> 6, pressure, l2_bypass, slot_en
+            cfg, st, lines[slot] >> 6, pressure, l2_bypass, slot_en,
+            geom, ven,
         )
         n_host = n_host + (walked & slot_en).astype(jnp.int32)
         n_nt_hit = n_nt_hit + nth.astype(jnp.int32)
         n_nv_hit = n_nv_hit + nvh.astype(jnp.int32)
         hier, c, d = access_pte(st.hier, lines[slot], pressure,
-                                cfg.tlb_aware, cfg.lat, slot_en)
+                                cfg.tlb_aware, cfg.lat, slot_en, geom=geom)
         st = st._replace(hier=hier)
         cycles = cycles + ncyc + c
         n_dram = n_dram + d.astype(jnp.int32)
@@ -135,7 +148,7 @@ def guest_walk_2d(cfg, st, vpn, is2m, pressure, l2_bypass, enable):
 
     # finally translate the data page's own gPA (gpn = vpn, identity map)
     st, ncyc, walked, nth, nvh = nested_translate(
-        cfg, st, vpn, pressure, l2_bypass, en)
+        cfg, st, vpn, pressure, l2_bypass, en, geom, ven)
     n_host = n_host + (walked & en).astype(jnp.int32)
     n_nt_hit = n_nt_hit + nth.astype(jnp.int32)
     n_nv_hit = n_nv_hit + nvh.astype(jnp.int32)
@@ -146,8 +159,10 @@ class NestedWalkStage(Stage):
     name = "ptw2d"
 
     def lookup(self, cfg, st, req, need):
+        ven = None if req.dyn is None else req.dyn.victima_en
         st, wcyc, ndram, nhost, n_nt_hit, n_nv_hit = guest_walk_2d(
-            cfg, st, req.vpn, req.is2m, req.pressure, req.l2_bypass, need
+            cfg, st, req.vpn, req.is2m, req.pressure, req.l2_bypass, need,
+            l2_geom_of(req.dyn), ven,
         )
         info = {
             "walk_en": need, "ndram": ndram, "nhost": nhost,

@@ -12,26 +12,28 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core import ptwcp
-from repro.core.assoc import set_index
-from repro.core.caches import BT_TLB2, BT_TLB4, l2_retag_to_tlb, l2_touch
+from repro.core.caches import (BT_TLB2, BT_TLB4, l2_lookup, l2_retag_to_tlb,
+                               l2_touch)
 from repro.core.page_table import walk
-from repro.core.stages.base import Stage, StageResult
+from repro.core.stages.base import Stage, StageResult, l2_geom_of
 
 
 class VictimaStage(Stage):
     name = "victima"
 
     def lookup(self, cfg, st, req, need):
+        geom = l2_geom_of(req.dyn)
+        # ladder lanes with victima_en=False never install TLB blocks, so
+        # their probes can never hit; the gate still masks the touch for
+        # defense in depth (None = static run, gate compiled away)
+        ven = None if req.dyn is None else req.dyn.victima_en
         vkey = jnp.where(req.is2m, req.vpn2 >> 3, req.vpn >> 3)
         vbt = jnp.where(req.is2m, BT_TLB2, BT_TLB4)
         # typed lookup (btype must match)
-        sset = set_index(vkey, st.hier.l2.n_sets)
-        rows_hit = (st.hier.l2.valid[sset]
-                    & (st.hier.l2.tags[sset] == vkey)
-                    & (st.hier.l2.btype[sset] == vbt))
-        vh = jnp.any(rows_hit)
-        vwy = jnp.argmax(rows_hit)
+        vh, vwy, sset = l2_lookup(st.hier.l2, vkey, vbt, geom)
         vhit = need & vh
+        if ven is not None:
+            vhit = vhit & ven
         l2c = l2_touch(st.hier.l2, sset, vwy, req.pressure, cfg.tlb_aware,
                        vhit)
         st = st._replace(hier=st.hier._replace(l2=l2c))
@@ -40,6 +42,8 @@ class VictimaStage(Stage):
                                info={"vkey": vkey, "vbt": vbt})
 
     def fill(self, cfg, st, req, out):
+        geom = l2_geom_of(req.dyn)
+        ven = None if req.dyn is None else req.dyn.victima_en
         walk_res = out["_walk"]
         walk_en = walk_res.info["walk_en"]
         ndram = walk_res.info["ndram"]
@@ -54,10 +58,18 @@ class VictimaStage(Stage):
         ev2m = (ev_tag & 1).astype(jnp.bool_)
         bg_vpn4 = jnp.where(ev2m, ev_vpn << 9, ev_vpn)
 
-        i4 = jnp.stack([req.vpn & (cfg.n_pages4 - 1),
-                        bg_vpn4 & (cfg.n_pages4 - 1)])
-        i2 = jnp.stack([req.vpn2 & (cfg.n_pages2 - 1),
-                        ev_vpn & (cfg.n_pages2 - 1)])
+        # counter slot 1 (the background-walk slot): when this lane's
+        # victima gate is off it must reproduce the walker's plain
+        # fill_walk_counters bit-for-bit, so the slot is redirected onto
+        # the demand index (both slots then scatter the same updated
+        # value — equivalent to the single-index update)
+        d4, b4 = req.vpn & (cfg.n_pages4 - 1), bg_vpn4 & (cfg.n_pages4 - 1)
+        d2, b2 = req.vpn2 & (cfg.n_pages2 - 1), ev_vpn & (cfg.n_pages2 - 1)
+        if ven is not None:
+            b4 = jnp.where(ven, b4, d4)
+            b2 = jnp.where(ven, b2, d2)
+        i4 = jnp.stack([d4, b4])
+        i2 = jnp.stack([d2, b2])
         f4, c4 = st.pc4.freq[i4].astype(jnp.int32), \
             st.pc4.cost[i4].astype(jnp.int32)
         f2, c2 = st.pc2.freq[i2].astype(jnp.int32), \
@@ -71,8 +83,10 @@ class VictimaStage(Stage):
                              jnp.minimum(cpost, ptwcp.COST_MAX))
         pred = pred if cfg.use_ptwcp else jnp.bool_(True)
         ins = walk_en & (pred | req.l2_bypass)
+        if ven is not None:
+            ins = ins & ven
         l2c = l2_retag_to_tlb(st.hier.l2, vkey, vbt, req.pressure,
-                              cfg.tlb_aware, ins)
+                              cfg.tlb_aware, ins, geom)
         st = st._replace(hier=st.hier._replace(l2=l2c))
 
         # eviction-triggered background walk + TLB-block install
@@ -81,13 +95,15 @@ class VictimaStage(Stage):
         epred = ptwcp.predict(fe, ce)
         epred = epred if cfg.use_ptwcp else jnp.bool_(True)
         bg = miss2 & ev_valid & (epred | req.l2_bypass)
+        if ven is not None:
+            bg = bg & ven
         hier, pwcs, _, bdram = walk(
             st.hier, st.pwcs, bg_vpn4, ev2m, now, req.pressure,
-            cfg.tlb_aware, cfg.lat, bg,
+            cfg.tlb_aware, cfg.lat, bg, geom,
         )
         ebt = jnp.where(ev2m, BT_TLB2, BT_TLB4)
         l2c = l2_retag_to_tlb(hier.l2, ev_vpn >> 3, ebt, req.pressure,
-                              cfg.tlb_aware, bg)
+                              cfg.tlb_aware, bg, geom)
         st = st._replace(hier=hier._replace(l2=l2c), pwcs=pwcs)
         out[self.name].info["n_bg"] = bg.astype(jnp.int32)
 
@@ -99,6 +115,13 @@ class VictimaStage(Stage):
         nc4 = jnp.minimum(c4 + (en4 & dr), ptwcp.COST_MAX)
         nf2 = jnp.minimum(f2 + en2, ptwcp.FREQ_MAX)
         nc2 = jnp.minimum(c2 + (en2 & dr), ptwcp.COST_MAX)
+        if ven is not None:
+            # gate off: slot 1 aliases slot 0, so it must carry slot 0's
+            # updated value (a stale duplicate write would win the scatter)
+            nf4 = nf4.at[1].set(jnp.where(ven, nf4[1], nf4[0]))
+            nc4 = nc4.at[1].set(jnp.where(ven, nc4[1], nc4[0]))
+            nf2 = nf2.at[1].set(jnp.where(ven, nf2[1], nf2[0]))
+            nc2 = nc2.at[1].set(jnp.where(ven, nc2[1], nc2[0]))
         return st._replace(
             pc4=ptwcp.PageCounters(
                 freq=st.pc4.freq.at[i4].set(nf4.astype(jnp.uint8)),

@@ -38,9 +38,53 @@ def system_config(system: str):
     return systems.config(system)
 
 
+def _sim_config(system: str, overrides: dict | None):
+    """The ONE place a run's SimConfig is materialized.
+
+    ``run``, ``run_batch`` and ``run_ladder`` all store under the same
+    cache key, so the Stats they produce must not depend on which code
+    path filled the entry — any config tweak must happen here.  (The
+    per-access ``ipa`` rides in the trace itself, never in the config.)
+    """
+    cfg = systems.config(system)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def _canon(v):
+    """Canonicalize an override value for hashing.
+
+    ``json.dumps`` crashes on dataclasses/NamedTuples (``Lat``) and
+    numpy/jnp scalars, and reprs could alias distinct overrides; this
+    maps them to stable, tagged JSON-able structures instead.
+    """
+    if dataclasses.is_dataclass(v) and not isinstance(v, type):
+        fields = sorted(dataclasses.fields(v), key=lambda f: f.name)
+        return {"__dataclass__": type(v).__name__,
+                **{f.name: _canon(getattr(v, f.name)) for f in fields}}
+    if isinstance(v, tuple) and hasattr(v, "_fields"):  # NamedTuple (Lat)
+        return {"__namedtuple__": type(v).__name__,
+                **{k: _canon(x) for k, x in sorted(v._asdict().items())}}
+    if isinstance(v, (np.generic, np.ndarray)) or isinstance(v, jax.Array):
+        a = np.asarray(v)
+        return a.item() if a.ndim == 0 else [_canon(x) for x in a.tolist()]
+    if isinstance(v, dict):
+        return {str(k): _canon(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_canon(x) for x in v]
+    if v is None or isinstance(v, (bool, int, float, str)):
+        return v
+    # a repr() fallback would be process-unstable (object addresses) and
+    # silently defeat the cache — unknown types must fail loudly
+    raise TypeError(
+        f"cannot canonicalize override value of type {type(v).__name__}: "
+        f"{v!r}")
+
+
 def _key(system: str, workload: str, n: int, seed: int,
          overrides: dict | None) -> str:
-    blob = json.dumps([system, workload, n, seed, overrides or {}],
+    blob = json.dumps([system, workload, n, seed, _canon(overrides or {})],
                       sort_keys=True)
     return hashlib.sha1(blob.encode()).hexdigest()[:16]
 
@@ -116,9 +160,7 @@ def run_batch(system: str, workloads=None, n: int = 150_000, seed: int = 0,
             out[w] = got
     if missing:
         gens = [trace_gen.generate(w, n=n, seed=seed) for w in missing]
-        cfg = system_config(system)
-        if overrides:
-            cfg = dataclasses.replace(cfg, **overrides)
+        cfg = _sim_config(system, overrides)
         # overrides may change the composition (e.g. victima=True on
         # radix): let make_step re-derive the stages from the final cfg
         stage_names = None if overrides else systems.get(system).stages
@@ -131,16 +173,17 @@ def run_batch(system: str, workloads=None, n: int = 150_000, seed: int = 0,
     return {w: out[w] for w in workloads}
 
 
-def run_ladder(ladder: str = "l2tlb", workloads=None, n: int = 150_000,
+def run_ladder(ladder: str, workloads=None, n: int = 150_000,
                seed: int = 0, cache: bool = True, members=None):
     """Fill the cache for a whole system ladder in ONE compiled call.
 
-    All ladder members (e.g. the L2-TLB size ladder radix..128K+CACTI
-    variants) are vmapped over their Dyn sizing scalars and over the
-    workload axis, so the sweep pays a single compilation instead of one
-    per system.  `members` restricts the run to a subset of the ladder.
-    Returns dict system -> dict workload -> result, byte-compatible with
-    per-system ``run_batch`` results.
+    All ladder members (e.g. the 18-system radix/victima family incl.
+    the Fig. 25 L2-cache sizes, or the L3-TLB latency trio) are vmapped
+    over their Dyn sizing scalars and over the workload axis, so the
+    sweep pays a single compilation instead of one per system.
+    `members` restricts the run to a subset of the ladder.  Returns dict
+    system -> dict workload -> result, byte-compatible with per-system
+    ``run_batch`` results.
     """
     members = tuple(members or systems.LADDERS[ladder])
     workloads = workloads or trace_gen.all_workloads()
@@ -158,9 +201,9 @@ def run_ladder(ladder: str = "l2tlb", workloads=None, n: int = 150_000,
         gens = [trace_gen.generate(w, n=n, seed=seed) for w in missing]
         cfg = systems.ladder_base_config(ladder, members)
         dyns = systems.ladder_dyn(members)
-        per, extras = simulate_systems(
-            cfg, dyns, _stack_traces(gens, n),
-            stage_names=systems.get(members[0]).stages)
+        # the base composition may contain dyn-gated stages some members
+        # lack (radix lanes riding a victima ladder): derive from cfg
+        per, extras = simulate_systems(cfg, dyns, _stack_traces(gens, n))
         for si, s in enumerate(members):
             for wi, (w, g) in enumerate(zip(missing, gens)):
                 result = (_np_stats(per[si][wi]), extras[si][wi], g["spec"])
@@ -181,10 +224,7 @@ def run(system: str, workload: str, n: int = 150_000, seed: int = 0,
         return got
 
     gen = trace_gen.generate(workload, n=n, seed=seed)
-    cfg = system_config(system)
-    if overrides:
-        cfg = dataclasses.replace(cfg, **overrides)
-    cfg = dataclasses.replace(cfg, ipa=gen["spec"].ipa)
+    cfg = _sim_config(system, overrides)
     trace = {k: jnp.asarray(v) for k, v in gen["trace"].items()}
     trace["ipa"] = jnp.full((len(gen["trace"]["vpn"]),), gen["spec"].ipa,
                             jnp.float32)

@@ -2,10 +2,12 @@
 benchmark suite needs.  Run as ``python -m repro.sim.sweep`` (results
 land in .sim_cache and benchmarks read them instantly).
 
-Shape-compatible system ladders (the L2-TLB size ladder incl. CACTI
-variants, the L3-TLB latency ladder) are filled by ONE compiled vmapped
-call each via ``run_ladder``; the remaining systems run through the
-per-system batched path.
+Shape-compatible system ladders are discovered from the registry
+(``systems.LADDERS``) — e.g. the 18-system radix/victima family
+(L2-TLB sizes incl. CACTI variants + the Fig. 25 L2-cache sizes) and
+the L3-TLB latency trio — and filled by ONE compiled vmapped call each
+via ``run_ladder``; the remaining systems run through the per-system
+batched path.
 """
 from __future__ import annotations
 
@@ -54,6 +56,13 @@ SYSTEMS = [
 
 def main(selected=None):
     selected = selected or SYSTEMS
+    # validate CLI names BEFORE any simulation: a typo used to burn the
+    # full ladder compile and then die with a KeyError mid-sweep
+    unknown = sorted(set(selected) - set(systems.REGISTRY))
+    if unknown:
+        raise SystemExit(
+            f"unknown system(s): {', '.join(unknown)}; registered: "
+            f"{', '.join(sorted(systems.REGISTRY))}")
     t00 = time.time()
     done: set[str] = set()
     # batched ladders first: one compilation covers many systems.  A

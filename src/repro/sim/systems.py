@@ -2,9 +2,10 @@
 
 Each ``System`` names its translation-pipeline stage composition (see
 repro.core.stages) plus the SimConfig overrides that size it.  Ladders
-group shape-compatible systems — systems whose configs differ only in
-``DYN_FIELDS`` (L2-TLB geometry/latency, L3-TLB latency) — which the
-sweep simulates in ONE compiled, vmapped call (mmu.simulate_systems).
+are discovered automatically (``discover_ladders``): systems whose
+configs differ only in ``DYN_FIELDS`` (L2-TLB geometry/latency, L3-TLB
+latency, L2-*cache* geometry, the dyn-gateable victima flag) batch into
+ONE compiled, vmapped call per ladder (mmu.simulate_systems).
 
 Adding a new translation scheme = writing a stage module + registering
 a System here; see docs/architecture.md.
@@ -13,9 +14,10 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 
-from repro.core.stages import DYN_FIELDS, Dyn, default_stages
+from repro.core.stages import DYN_FIELDS, Dyn, default_stages, dyn_of
 from repro.core.mmu import SimConfig
 
 # stage compositions (tuples shared across entries for readability)
@@ -136,18 +138,52 @@ register("isp", _RADIX, "ideal shadow paging: 1-D walk, free updates",
 
 
 # --------------------------------------------------------------- ladders
+#
+# Ladders are DISCOVERED, not declared: any group of registered systems
+# whose configs agree after pinning DYN_FIELDS — and whose compositions
+# agree after dropping dyn-*gateable* stages — batches into one compiled
+# vmapped simulate_systems call.  Registering a new size/latency variant
+# automatically joins it to its family's ladder.
 
-LADDERS: dict[str, tuple[str, ...]] = {
-    "l2tlb": tuple(names("l2tlb_ladder")),
-    "l3tlb": tuple(names("l3tlb_ladder")),
+# stages that a batched ladder can switch off per-lane via a Dyn gate
+# (the stage still runs compiled, but its state writes are masked to a
+# bit-exact no-op): stage name -> (SimConfig flag, Dyn field)
+DYN_GATED_STAGES: dict[str, tuple[str, str]] = {
+    "victima": ("victima", "victima_en"),
 }
 
 
-def ladder_base_config(ladder: str, members=None) -> SimConfig:
+def _ladder_key(sys_: System):
+    """Systems with equal keys are shape-compatible ladder mates."""
+    cfg = sys_.config()
+    pinned = dataclasses.replace(
+        cfg, **{f: getattr(SimConfig(), f) for f in DYN_FIELDS})
+    stages = tuple(s for s in sys_.stages if s not in DYN_GATED_STAGES)
+    return stages, pinned
+
+
+def discover_ladders(registry: dict[str, System] | None = None
+                     ) -> dict[str, tuple[str, ...]]:
+    """Group registry systems into shape-compatible ladders.
+
+    Returns {ladder_name: member names} for every group of >= 2 systems;
+    the ladder is named after its first-registered member.  Singletons
+    run through the per-system batched path instead.
+    """
+    registry = REGISTRY if registry is None else registry
+    groups: dict = {}
+    for name, sys_ in registry.items():
+        groups.setdefault(_ladder_key(sys_), []).append(name)
+    return {g[0]: tuple(g) for g in groups.values() if len(g) >= 2}
+
+
+def ladder_base_config(ladder: str | None = None, members=None) -> SimConfig:
     """Static config for a ladder: structures at the ladder maximum.
 
     Validates shape-compatibility — members may differ only in
-    DYN_FIELDS (everything else must match the first member).
+    DYN_FIELDS (everything else must match the first member).  Gated
+    stage flags are ORed so the base composition contains every stage
+    any member needs (lanes without it mask it off via Dyn).
     """
     members = members or LADDERS[ladder]
     cfgs = [config(n) for n in members]
@@ -155,21 +191,26 @@ def ladder_base_config(ladder: str, members=None) -> SimConfig:
     norm = {dataclasses.replace(c, **pinned) for c in cfgs}
     if len(norm) != 1:
         raise ValueError(
-            f"ladder {ladder!r} members differ beyond {DYN_FIELDS}")
+            f"ladder {ladder or members[0]!r} members differ beyond "
+            f"{DYN_FIELDS}")
     return dataclasses.replace(
         cfgs[0],
         l2tlb_sets=max(c.l2tlb_sets for c in cfgs),
         l2tlb_ways=max(c.l2tlb_ways for c in cfgs),
+        l2_sets=max(c.l2_sets for c in cfgs),
+        l2_ways=max(c.l2_ways for c in cfgs),
+        victima=any(c.victima for c in cfgs),
     )
 
 
 def ladder_dyn(members) -> Dyn:
-    """Stacked per-system Dyn scalars ([S]-leaves) for ladder members."""
-    cfgs = [config(n) for n in members]
-    return Dyn(
-        l2tlb_set_mask=jnp.asarray([c.l2tlb_sets - 1 for c in cfgs],
-                                   jnp.int32),
-        l2tlb_ways=jnp.asarray([c.l2tlb_ways for c in cfgs], jnp.int32),
-        l2tlb_lat=jnp.asarray([c.l2tlb_lat for c in cfgs], jnp.int32),
-        l3tlb_lat=jnp.asarray([c.l3tlb_lat for c in cfgs], jnp.int32),
-    )
+    """Stacked per-system Dyn scalars ([S]-leaves) for ladder members.
+
+    Derived by stacking ``dyn_of`` per member so the field-to-config
+    mapping lives in exactly one place (stages.base.dyn_of).
+    """
+    dyns = [dyn_of(config(n)) for n in members]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *dyns)
+
+
+LADDERS: dict[str, tuple[str, ...]] = discover_ladders()

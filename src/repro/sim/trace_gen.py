@@ -97,7 +97,9 @@ def generate(name: str, n: int = 400_000, seed: int = 0) -> dict:
     """Generate a trace for workload `name`.
 
     Returns {"trace": {vpn,is2m,line}, "spec": WorkloadSpec,
-             "n_pages4": int} with numpy arrays (callers jnp-ify).
+             "n_pages": int (TOTAL 4K-page-equivalents, including the
+             2M-backed region), "n_pages_2m_region": int} with numpy
+    arrays (callers jnp-ify).
     """
     spec = WORKLOADS[name]
     # stable per-workload salt: str.hash() is process-salted, which made
@@ -166,7 +168,9 @@ def generate(name: str, n: int = 400_000, seed: int = 0) -> dict:
             "line": line,
         },
         "spec": spec,
-        "n_pages4": n_pages,
+        # total page count (4K-page-equivalents) — NOT just the 4K-backed
+        # region; the old "n_pages4" name wrongly suggested the latter
+        "n_pages": n_pages,
         "n_pages_2m_region": n2_pages4 // 512,
     }
 

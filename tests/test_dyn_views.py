@@ -1,0 +1,229 @@
+"""Dynamic-geometry views + path-independent sim cache.
+
+Property tests (deterministic random op sequences — no hypothesis
+dependency) pin the core ladder invariant: a structure allocated at its
+ladder-maximum shape, operated through a masked view, is BIT-IDENTICAL
+to a statically allocated smaller structure:
+
+- assoc.lookup_dyn / insert_lru_dyn   (L2 TLB views, PR 1)
+- caches.L2Geom through l2_lookup / l2_insert / l2_retag_to_tlb /
+  l2_touch and the access_data / access_pte composite paths (this PR)
+
+Plus the runner satellites: run() and run_batch() must write
+byte-identical cache entries for the same key, and _key must digest
+non-JSON override values (Lat, numpy/jnp scalars) without aliasing.
+"""
+import dataclasses
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import assoc, caches
+from repro.core.caches import BT_DATA, BT_TLB2, BT_TLB4, L2Geom, Lat
+
+SEED = 20260730
+
+
+# ------------------------------------------------------------- assoc views
+
+
+def test_assoc_masked_view_equals_small_static():
+    rng = np.random.default_rng(SEED)
+    SETS, WAYS = 8, 4
+    big = assoc.make(4 * SETS, 2 * WAYS)
+    small = assoc.make(SETS, WAYS)
+    mask = jnp.int32(SETS - 1)
+    ways = jnp.int32(WAYS)
+    for t in range(300):
+        key = jnp.int32(rng.integers(0, 1 << 20))
+        now = jnp.int32(t)
+        if rng.random() < 0.5:
+            hb, wb, sb = assoc.lookup_dyn(big, key, mask, ways)
+            hs, ws, ss = assoc.lookup(small, key)
+            assert bool(hb) == bool(hs)
+            if bool(hs):
+                assert int(wb) == int(ws) and int(sb) == int(ss)
+                big = assoc.touch_lru(big, sb, wb, now)
+                small = assoc.touch_lru(small, ss, ws, now)
+        else:
+            en = bool(rng.random() < 0.9)
+            big, ev_t_b, ev_v_b = assoc.insert_lru_dyn(
+                big, key, now, mask, ways, en)
+            small, ev_t_s, ev_v_s = assoc.insert_lru(small, key, now, en)
+            assert bool(ev_v_b) == bool(ev_v_s)
+            if bool(ev_v_s):
+                assert int(ev_t_b) == int(ev_t_s)
+    assert np.array_equal(np.asarray(big.tags)[:SETS, :WAYS],
+                          np.asarray(small.tags))
+    assert np.array_equal(np.asarray(big.valid)[:SETS, :WAYS],
+                          np.asarray(small.valid))
+    assert np.array_equal(np.asarray(big.meta)[:SETS, :WAYS],
+                          np.asarray(small.meta))
+    # the view never leaks outside its live geometry
+    live = np.zeros_like(np.asarray(big.valid), bool)
+    live[:SETS, :WAYS] = True
+    assert not np.asarray(big.valid)[~live].any()
+
+
+def _assert_l2_view_equal(big, small, sets, ways):
+    for field in ("tags", "valid", "rrpv", "btype", "reuse"):
+        a = np.asarray(getattr(big, field))[:sets, :ways]
+        b = np.asarray(getattr(small, field))
+        assert np.array_equal(a, b), field
+    for field in ("hist_reuse_data", "hist_reuse_tlb",
+                  "n_tlb4", "n_tlb2", "n_ntlb"):
+        assert np.array_equal(np.asarray(getattr(big, field)),
+                              np.asarray(getattr(small, field))), field
+    live = np.zeros((big.tags.shape[0], big.tags.shape[1]), bool)
+    live[:sets, :ways] = True
+    assert not np.asarray(big.valid)[~live].any()
+
+
+@pytest.mark.parametrize("tlb_aware", [True, False])
+def test_l2_cache_masked_view_equals_small_static(tlb_aware):
+    """Random l2_insert/l2_lookup/l2_touch/l2_retag_to_tlb sequences:
+    the L2Geom view of a 4x-oversized L2 == a statically small L2."""
+    rng = np.random.default_rng(SEED + tlb_aware)
+    SETS, WAYS = 8, 4
+    big = caches.make_l2(4 * SETS, 4 * WAYS)
+    small = caches.make_l2(SETS, WAYS)
+    geom = L2Geom(set_mask=jnp.int32(SETS - 1), n_ways=jnp.int32(WAYS))
+    bts = [BT_DATA, BT_TLB4, BT_TLB2]
+    for t in range(400):
+        key = jnp.int32(rng.integers(0, 1 << 16))
+        bt = bts[rng.integers(0, len(bts))]
+        pressure = jnp.bool_(rng.random() < 0.5)
+        op = rng.random()
+        if op < 0.25:
+            hb, wb, sb = caches.l2_lookup(big, key, bt, geom)
+            hs, ws, ss = caches.l2_lookup(small, key, bt)
+            assert bool(hb) == bool(hs), t
+            if bool(hs):
+                assert int(wb) == int(ws) and int(sb) == int(ss)
+                big = caches.l2_touch(big, sb, wb, pressure, tlb_aware,
+                                      True)
+                small = caches.l2_touch(small, ss, ws, pressure,
+                                        tlb_aware, True)
+        elif op < 0.65:
+            en = bool(rng.random() < 0.9)
+            big = caches.l2_insert(big, key, bt, pressure, tlb_aware, en,
+                                   geom)
+            small = caches.l2_insert(small, key, bt, pressure, tlb_aware,
+                                     en)
+        else:
+            tlb_bt = BT_TLB2 if bt == BT_TLB2 else BT_TLB4
+            big = caches.l2_retag_to_tlb(big, key, tlb_bt, pressure,
+                                         tlb_aware, True, geom)
+            small = caches.l2_retag_to_tlb(small, key, tlb_bt, pressure,
+                                           tlb_aware, True)
+    _assert_l2_view_equal(big, small, SETS, WAYS)
+
+
+def test_hier_access_paths_masked_view_equals_small_static():
+    """access_data + access_pte composites (incl. prefetch + background
+    traffic + L3 interaction) under an L2Geom view == small static L2."""
+    rng = np.random.default_rng(SEED)
+    SETS, WAYS = 16, 4
+    lat = Lat()
+    big = caches.make_hier(l1_sets=4, l1_ways=2, l2_sets=4 * SETS,
+                           l2_ways=2 * WAYS, l3_sets=16, l3_ways=4)
+    small = caches.make_hier(l1_sets=4, l1_ways=2, l2_sets=SETS,
+                             l2_ways=WAYS, l3_sets=16, l3_ways=4)
+    geom = L2Geom(set_mask=jnp.int32(SETS - 1), n_ways=jnp.int32(WAYS))
+    for t in range(200):
+        line = jnp.int32(rng.integers(0, 1 << 14))
+        now = jnp.int32(t + 1)
+        pressure = jnp.bool_(rng.random() < 0.5)
+        if rng.random() < 0.7:
+            big, cb = caches.access_data(big, line, now, pressure, True,
+                                         lat, geom)
+            small, cs = caches.access_data(small, line, now, pressure,
+                                           True, lat)
+        else:
+            big, cb, db = caches.access_pte(big, line, pressure, True,
+                                            lat, True, bt=BT_TLB4,
+                                            geom=geom)
+            small, cs, ds = caches.access_pte(small, line, pressure, True,
+                                              lat, True, bt=BT_TLB4)
+            assert bool(db) == bool(ds), t
+        assert int(cb) == int(cs), t
+    _assert_l2_view_equal(big.l2, small.l2, SETS, WAYS)
+    assert np.array_equal(np.asarray(big.l3.tags), np.asarray(small.l3.tags))
+    assert np.array_equal(np.asarray(big.l1d.tags),
+                          np.asarray(small.l1d.tags))
+
+
+# --------------------------------------------------- path-independent cache
+
+
+_TINY = dict(
+    l2tlb_sets=4, l2tlb_ways=4,
+    l1d4_sets=2, l1d4_ways=2, l1d2_sets=2, l1d2_ways=2,
+    l2_sets=64, l2_ways=8, l3_sets=64, l3_ways=8,
+    n_pages4=1 << 12, n_pages2=1 << 8, n_pagesh=1 << 8, n_feat=1 << 10,
+)
+
+
+def test_run_and_run_batch_write_identical_cache_entries(tmp_path,
+                                                         monkeypatch):
+    """Fresh-cache run() and run_batch() must produce byte-identical
+    entries for the same (system, workload, n, seed, overrides) —
+    cached Stats must not depend on which code path filled them."""
+    from repro.sim import runner
+
+    n, seed, w = 1500, 3, "bc"
+    dir_a, dir_b = str(tmp_path / "a"), str(tmp_path / "b")
+
+    monkeypatch.setattr(runner, "CACHE_DIR", dir_a)
+    res_run = runner.run("radix", w, n=n, seed=seed, overrides=_TINY)
+    monkeypatch.setattr(runner, "CACHE_DIR", dir_b)
+    res_batch = runner.run_batch("radix", workloads=[w], n=n, seed=seed,
+                                 overrides=_TINY)[w]
+
+    key = runner._key("radix", w, n, seed, _TINY) + ".pkl"
+    with open(os.path.join(dir_a, key), "rb") as f:
+        blob_a = f.read()
+    with open(os.path.join(dir_b, key), "rb") as f:
+        blob_b = f.read()
+    assert blob_a == blob_b
+    for field, a, b in zip(res_run[0]._fields, res_run[0], res_batch[0]):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), field
+
+
+def test_key_canonicalizes_non_json_overrides():
+    from repro.sim import runner
+
+    # NamedTuple / dataclass values must not crash
+    k_lat = runner._key("radix", "bc", 10, 0, {"lat": Lat(l2=20)})
+    assert k_lat != runner._key("radix", "bc", 10, 0,
+                                {"lat": (4, 20, 35, 160)})
+    # numpy / jnp scalars hash like the equivalent python numbers
+    # (they produce the same replace()d config, so they must share a key)
+    assert runner._key("radix", "bc", 10, 0, {"l2_sets": np.int32(64)}) \
+        == runner._key("radix", "bc", 10, 0, {"l2_sets": 64})
+    assert runner._key("radix", "bc", 10, 0, {"l2_sets": jnp.int32(64)}) \
+        == runner._key("radix", "bc", 10, 0, {"l2_sets": 64})
+    # distinct values stay distinct
+    assert runner._key("radix", "bc", 10, 0, {"l2_sets": 64}) \
+        != runner._key("radix", "bc", 10, 0, {"l2_sets": 128})
+    # still stable for plain-JSON overrides (legacy keys unchanged)
+    assert runner._key("radix", "bc", 10, 0, {"victima": True}) \
+        == runner._key("radix", "bc", 10, 0, {"victima": True})
+
+
+def test_sweep_rejects_unknown_systems_before_simulating():
+    from repro.sim import sweep
+
+    with pytest.raises(SystemExit, match="unknown system"):
+        sweep.main(["radix", "definitely_not_a_system"])
+
+
+def test_trace_gen_reports_total_page_count():
+    from repro.sim import trace_gen
+
+    gen = trace_gen.generate("bc", n=1000, seed=0)
+    assert "n_pages4" not in gen  # renamed: it was the TOTAL page count
+    assert gen["n_pages"] > 0
+    assert int(np.max(gen["trace"]["vpn"])) < gen["n_pages"]

@@ -5,7 +5,12 @@
   simulated once — identical config => identical simulation);
 - the stage pipeline reproduces the pre-refactor monolithic MMU's Stats
   bit-for-bit on a fixed seed (tests/golden/mmu_stats.json);
-- a batched (vmapped) ladder run is bit-identical to per-system runs.
+- a batched (vmapped) ladder run is bit-identical to per-system runs —
+  for the L2-TLB geometry Dyn fields, the L2-*cache* geometry view
+  (Fig. 25 family), the per-lane victima gate, and the virtualized
+  2-D-walk pair;
+- ladders are DISCOVERED from DYN_FIELDS-compatibility of registry
+  entries (no hand-maintained member lists).
 """
 import dataclasses
 import json
@@ -53,7 +58,7 @@ def test_registry_compositions_are_canonical():
 
 def test_ladders_are_shape_compatible():
     for ladder, members in systems.LADDERS.items():
-        assert len(members) >= 3, ladder
+        assert len(members) >= 2, ladder
         base = systems.ladder_base_config(ladder)
         dyns = systems.ladder_dyn(members)
         assert np.asarray(dyns.l2tlb_set_mask).shape == (len(members),)
@@ -62,6 +67,38 @@ def test_ladders_are_shape_compatible():
             c = systems.config(m)
             assert c.l2tlb_sets <= base.l2tlb_sets, m
             assert c.l2tlb_ways <= base.l2tlb_ways, m
+            assert c.l2_sets <= base.l2_sets, m
+            assert c.l2_ways <= base.l2_ways, m
+            # a member may only lack stages the ladder can dyn-gate off
+            extra = set(default_stages(base)) - set(systems.get(m).stages)
+            assert extra <= set(systems.DYN_GATED_STAGES), (ladder, m)
+
+
+def test_ladders_are_derived_from_registry():
+    """LADDERS is discovered from DYN_FIELDS-compatibility, not a
+    hand-maintained list: registering a new size variant must join it to
+    its family's ladder automatically."""
+    fake = dict(systems.REGISTRY)
+    sys_ = systems.System(
+        name="radix_l2_16m", stages=("l1_tlb", "l2_tlb", "ptw"),
+        overrides={"l2_sets": 16384})
+    fake["radix_l2_16m"] = sys_
+    ladders = systems.discover_ladders(fake)
+    containing = [m for m in ladders.values() if "radix_l2_16m" in m]
+    assert len(containing) == 1
+    assert "radix" in containing[0] and "victima" in containing[0]
+    # and the real LADDERS matches a fresh discovery over the registry
+    assert systems.LADDERS == systems.discover_ladders()
+
+
+def test_fig25_family_shares_one_ladder():
+    """The whole Fig. 25 L2-cache-size family — victima AND radix at
+    1/2/4/8 MB — must batch into ONE compiled vmapped call."""
+    fam = {"victima", "radix"} | {
+        f"{p}_l2_{s}" for p in ("victima", "radix")
+        for s in ("1m", "4m", "8m")}
+    containing = [m for m in systems.LADDERS.values() if fam <= set(m)]
+    assert len(containing) == 1, systems.LADDERS
 
 
 def test_every_system_constructs():
@@ -119,6 +156,10 @@ def test_batched_ladder_matches_single_runs(tiny_trace):
         l2tlb_lat=jnp.asarray(
             [v["l2tlb_lat"] for v in variants], jnp.int32),
         l3tlb_lat=jnp.asarray([base.l3tlb_lat] * len(variants), jnp.int32),
+        l2_set_mask=jnp.asarray([base.l2_sets - 1] * len(variants),
+                                jnp.int32),
+        l2_ways=jnp.asarray([base.l2_ways] * len(variants), jnp.int32),
+        victima_en=jnp.asarray([base.victima] * len(variants), jnp.bool_),
     )
     traces = {k: jnp.stack([v, v], axis=1) for k, v in tiny_trace.items()}
     per, extras = simulate_systems(base, dyns, traces)
@@ -129,3 +170,54 @@ def test_batched_ladder_matches_single_runs(tiny_trace):
         # both workload lanes saw the same trace -> identical stats
         assert np.array_equal(np.asarray(per[si][0].n_demand_ptw),
                               np.asarray(per[si][1].n_demand_ptw))
+
+
+def _ladder_equivalence(base_cfg, variants, tiny_trace):
+    """Batched (vmapped Dyn) run == per-variant static runs, bit-for-bit."""
+    cfgs = [dataclasses.replace(base_cfg, **v) for v in variants]
+    dyns = Dyn(
+        l2tlb_set_mask=jnp.asarray([c.l2tlb_sets - 1 for c in cfgs],
+                                   jnp.int32),
+        l2tlb_ways=jnp.asarray([c.l2tlb_ways for c in cfgs], jnp.int32),
+        l2tlb_lat=jnp.asarray([c.l2tlb_lat for c in cfgs], jnp.int32),
+        l3tlb_lat=jnp.asarray([c.l3tlb_lat for c in cfgs], jnp.int32),
+        l2_set_mask=jnp.asarray([c.l2_sets - 1 for c in cfgs], jnp.int32),
+        l2_ways=jnp.asarray([c.l2_ways for c in cfgs], jnp.int32),
+        victima_en=jnp.asarray([c.victima for c in cfgs], jnp.bool_),
+    )
+    base = dataclasses.replace(
+        base_cfg,
+        l2_sets=max(c.l2_sets for c in cfgs),
+        l2_ways=max(c.l2_ways for c in cfgs),
+        victima=any(c.victima for c in cfgs),
+    )
+    traces = {k: jnp.stack([v], axis=1) for k, v in tiny_trace.items()}
+    per, _ = simulate_systems(base, dyns, traces)
+    for si, c in enumerate(cfgs):
+        ref, _ = simulate(c, tiny_trace)
+        for field, a, b in zip(ref._fields, ref, per[si][0]):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), \
+                (variants[si], field)
+
+
+def test_batched_dyn_l2_cache_matches_single_runs(tiny_trace):
+    """The Fig. 25 machinery: vmapped L2-cache geometry views + the
+    per-lane victima gate == per-system static runs, bit-for-bit.  This
+    covers the dyn set mask / way limit on every L2 path (victima probe,
+    PTW fills, data accesses) and a radix lane riding a victima ladder."""
+    _ladder_equivalence(
+        GOLDEN_CFG,
+        [dict(l2_sets=16, l2_ways=4, victima=True),
+         dict(l2_sets=64, l2_ways=8, victima=False),
+         dict(l2_sets=32, l2_ways=8, victima=True)],
+        tiny_trace)
+
+
+def test_batched_dyn_virt_matches_single_runs(tiny_trace):
+    """np and victima_virt lanes share one compiled 2-D-walk ladder: the
+    nested-TLB-block machinery dyn-gates off bit-exactly."""
+    vbase = dataclasses.replace(GOLDEN_CFG, virt=True, l3_sets=16)
+    _ladder_equivalence(
+        vbase,
+        [dict(victima=False), dict(victima=True, l2_sets=16, l2_ways=4)],
+        tiny_trace)
