@@ -27,6 +27,25 @@ def ptw_reduction(base_stats, new_stats) -> float:
     return 1.0 - float(new_stats.n_demand_ptw) / max(b, 1.0)
 
 
+def restseg_hit_rate(stats) -> float:
+    """Fraction of RestSeg probes resolved without any FlexSeg walk
+    (Utopia: probes happen on L2-TLB / Victima / L3 / POM misses)."""
+    probes = float(stats.n_restseg_hit) + float(stats.n_restseg_miss)
+    return float(stats.n_restseg_hit) / max(probes, 1.0)
+
+
+def restseg_conflict_rate(stats) -> float:
+    """Fraction of RestSeg migrations that demoted a resident page back
+    to the FlexSeg (set-conflict pressure on the restrictive mapping)."""
+    return float(stats.n_restseg_conflict) / max(
+        float(stats.n_restseg_mig), 1.0)
+
+
+def avg_restseg_probe_cycles(stats) -> float:
+    probes = float(stats.n_restseg_hit) + float(stats.n_restseg_miss)
+    return float(stats.sum_restseg_cyc) / max(probes, 1.0)
+
+
 def translation_reach_mb(stats) -> float:
     """Average extra reach from TLB blocks resident in the L2 cache,
     *assuming 4KB pages* exactly as the paper's Fig. 23 does (8×4KB=32KB

@@ -8,6 +8,7 @@ Address map (64B-line ids, int32-safe):
   PML4 lines            PML4_BASE + (vpn>>27)>>3
   host PT lines (virt)  H*_BASE   + analogous, keyed by gpn
   POM-TLB lines         POM_BASE  + (vpn mod 64K)>>2
+  RestSeg tag lines     RESTSEG*_BASE + set    (Utopia, one line per set)
 
 The walker is equipped with 3 split PWCs covering PML4/PDP/PD (2-cycle,
 Table 3); a PWC hit at depth d skips all accesses above d.  4K walks touch
@@ -37,6 +38,8 @@ HPD_BASE = _B + 5 * _W
 HPDP_BASE = _B + 6 * _W
 HPML4_BASE = _B + 7 * _W
 POM_BASE = _B + 8 * _W
+RESTSEG4_BASE = _B + 9 * _W   # Utopia 4K RestSeg tag/permission lines
+RESTSEG2_BASE = _B + 10 * _W  # Utopia 2M RestSeg tag/permission lines
 
 PWC_LAT = 2
 

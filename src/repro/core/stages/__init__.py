@@ -19,12 +19,13 @@ from repro.core.stages.l3_tlb import L3TLBStage
 from repro.core.stages.nested import NestedWalkStage
 from repro.core.stages.pom import POMStage
 from repro.core.stages.ptw import RadixWalkStage
+from repro.core.stages.utopia import RestSegStage
 from repro.core.stages.victima import VictimaStage
 
 STAGES: dict[str, Stage] = {
     s.name: s for s in (
         L1TLBStage(), L2TLBStage(), VictimaStage(), L3TLBStage(),
-        POMStage(), RadixWalkStage(), NestedWalkStage(),
+        POMStage(), RestSegStage(), RadixWalkStage(), NestedWalkStage(),
     )
 }
 
@@ -40,6 +41,8 @@ def default_stages(cfg: SimConfig) -> tuple[str, ...]:
         names.append("l3_tlb")
     if cfg.pom:
         names.append("pom")
+    if cfg.utopia:
+        names.append("restseg")  # last resort before the FlexSeg walk
     names.append("ptw2d" if cfg.virt and not cfg.ideal_shadow else "ptw")
     return tuple(names)
 
@@ -59,12 +62,16 @@ def fill_order(names: tuple[str, ...]) -> tuple[str, ...]:
 
     Victima systems: the L2 TLB refill's evicted entry feeds Victima's
     background walk, so it must land first.  Non-Victima systems update
-    the walker's PTW-CP counters then refill the L2 TLB.  POM / L3-TLB
-    learning and the L1 refill close out every composition.
+    the walker's PTW-CP counters then refill the L2 TLB.  Utopia's
+    migration engine reads the post-walk PTW-CP counters, so it runs
+    right after whichever of those owns the counter traffic.  POM /
+    L3-TLB learning and the L1 refill close out every composition.
     """
     walker = names[-1]
     order = ["l2_tlb", "victima"] if "victima" in names \
         else [walker, "l2_tlb"]
+    if "restseg" in names:
+        order.append("restseg")
     order += [n for n in ("pom", "l3_tlb") if n in names]
     order.append("l1_tlb")
     return tuple(order)

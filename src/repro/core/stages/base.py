@@ -67,6 +67,11 @@ class SimConfig:
     use_ptwcp: bool = True       # False = insert every candidate (ablation)
     bypass_l2mpki: float = 5.0   # consult PTW-CP only if L2$ MPKI below this
     pressure_mpki: float = 5.0   # "translation pressure" threshold
+    # --- Utopia hybrid RestSeg/FlexSeg mapping
+    utopia: bool = False
+    restseg4_sets: int = 8192    # 4K-page RestSeg: 128K entries, 16-way
+    restseg2_sets: int = 256     # 2M-page RestSeg
+    restseg_ways: int = 16
     # --- caches
     l1_sets: int = 64
     l1_ways: int = 8
@@ -109,13 +114,19 @@ class Dyn(NamedTuple):
     victima_en: jax.Array      # bool — Victima stage live on this lane
     #   (lets a radix member ride a victima-composition ladder with the
     #    TLB-block installs and background walks masked off bit-exactly)
+    utopia_en: jax.Array       # bool — RestSeg stage live on this lane
+    restseg_ways: jax.Array    # int32 effective RestSeg ways
+    l3tlb_en: jax.Array        # bool — hardware L3 TLB live on this lane
+    pom_en: jax.Array          # bool — POM-TLB live on this lane
 
 
-# SimConfig fields a batched ladder may vary across members.  "victima"
-# is special: it is not a geometry scalar but a dyn-*gateable* stage flag
-# (see systems.DYN_GATED_STAGES).
+# SimConfig fields a batched ladder may vary across members.  "victima",
+# "utopia", "pom" and "l3tlb_sets" are special: they are not geometry
+# scalars but dyn-*gateable* stage flags (see systems.DYN_GATED_STAGES) —
+# lanes lacking the stage mask off all its state writes bit-exactly.
 DYN_FIELDS = ("l2tlb_sets", "l2tlb_ways", "l2tlb_lat", "l3tlb_lat",
-              "l2_sets", "l2_ways", "victima")
+              "l2_sets", "l2_ways", "victima",
+              "utopia", "restseg_ways", "l3tlb_sets", "pom")
 
 
 def dyn_of(cfg: SimConfig) -> Dyn:
@@ -128,6 +139,10 @@ def dyn_of(cfg: SimConfig) -> Dyn:
         l2_set_mask=jnp.int32(cfg.l2_sets - 1),
         l2_ways=jnp.int32(cfg.l2_ways),
         victima_en=jnp.bool_(cfg.victima),
+        utopia_en=jnp.bool_(cfg.utopia),
+        restseg_ways=jnp.int32(cfg.restseg_ways),
+        l3tlb_en=jnp.bool_(cfg.l3tlb_sets > 0),
+        pom_en=jnp.bool_(cfg.pom),
     )
 
 
@@ -158,6 +173,15 @@ class Stats(NamedTuple):
     hist_walk: jax.Array         # i32 [WALK_HIST_BUCKETS]
     sum_tlb4_live: jax.Array     # f32 — Σ live TLB blocks (reach, Fig 23)
     sum_tlb2_live: jax.Array     # f32
+    # --- Utopia RestSeg (zero for systems without the stage)
+    n_restseg_hit: jax.Array      # i32 — probes resolved by a RestSeg
+    n_restseg_miss: jax.Array     # i32 — probes that fell through to FlexSeg
+    n_restseg_mig: jax.Array      # i32 — pages migrated into a RestSeg
+    n_restseg_conflict: jax.Array  # i32 — migrations that demoted a page
+    #                                back to FlexSeg (set conflict)
+    sum_restseg_cyc: jax.Array    # f32 — Σ RestSeg tag-probe cycles
+    hist_restseg: jax.Array       # i32 [WALK_HIST_BUCKETS] — probe-latency
+    #                               buckets (same 10-cycle grid as hist_walk)
 
 
 def zero_stats() -> Stats:
@@ -170,6 +194,9 @@ def zero_stats() -> Stats:
         sum_trans_cyc=f, sum_l2miss_cyc=f, sum_data_cyc=f, sum_walk_cyc=f,
         hist_walk=jnp.zeros((WALK_HIST_BUCKETS,), jnp.int32),
         sum_tlb4_live=f, sum_tlb2_live=f,
+        n_restseg_hit=z, n_restseg_miss=z, n_restseg_mig=z,
+        n_restseg_conflict=z, sum_restseg_cyc=f,
+        hist_restseg=jnp.zeros((WALK_HIST_BUCKETS,), jnp.int32),
     )
 
 
@@ -204,6 +231,8 @@ class MMUState(NamedTuple):
     pwcs: PWCs
     hier: Hier
     ntlb: Assoc
+    restseg4: Assoc  # Utopia 4K-page RestSeg (tags = migrated vpn)
+    restseg2: Assoc  # Utopia 2M-page RestSeg (tags = migrated vpn2)
     pc4: ptwcp.PageCounters
     pc2: ptwcp.PageCounters
     pch: ptwcp.PageCounters
@@ -223,6 +252,10 @@ def make_state(cfg: SimConfig) -> MMUState:
         hier=make_hier(cfg.l1_sets, cfg.l1_ways, cfg.l2_sets, cfg.l2_ways,
                        cfg.l3_sets, cfg.l3_ways),
         ntlb=make(cfg.ntlb_sets if cfg.virt else 1, cfg.ntlb_ways),
+        restseg4=make(cfg.restseg4_sets if cfg.utopia else 1,
+                      cfg.restseg_ways if cfg.utopia else 1),
+        restseg2=make(cfg.restseg2_sets if cfg.utopia else 1,
+                      cfg.restseg_ways if cfg.utopia else 1),
         pc4=ptwcp.make_counters(cfg.n_pages4),
         pc2=ptwcp.make_counters(cfg.n_pages2),
         pch=ptwcp.make_counters(cfg.n_pagesh if cfg.virt else 1),

@@ -20,6 +20,17 @@ def accum_stats(s0: Stats, st: MMUState, out, walk_res, trans, past_l2,
     n_bg = out["victima"].info["n_bg"] if "victima" in out else jnp.int32(0)
     bucket = jnp.minimum(wcyc // 10, WALK_HIST_BUCKETS - 1)
     l2 = st.hier.l2
+    if "restseg" in out:
+        rs = out["restseg"]
+        rs_probed = rs.info["probed"]
+        rs_hit = rs.hit
+        rs_cyc = rs.cycles
+        rs_mig = rs.info["n_mig"]
+        rs_conf = rs.info["n_conflict"]
+    else:
+        rs_probed = rs_hit = jnp.bool_(False)
+        rs_mig = rs_conf = rs_cyc = jnp.int32(0)
+    rs_bucket = jnp.minimum(rs_cyc // 10, WALK_HIST_BUCKETS - 1)
     return Stats(
         n_access=s0.n_access + 1,
         n_l1tlb_hit=s0.n_l1tlb_hit + _hit32(out, "l1_tlb"),
@@ -42,6 +53,14 @@ def accum_stats(s0: Stats, st: MMUState, out, walk_res, trans, past_l2,
         hist_walk=s0.hist_walk.at[bucket].add(walk_en.astype(jnp.int32)),
         sum_tlb4_live=s0.sum_tlb4_live + l2.n_tlb4.astype(jnp.float32),
         sum_tlb2_live=s0.sum_tlb2_live + l2.n_tlb2.astype(jnp.float32),
+        n_restseg_hit=s0.n_restseg_hit + rs_hit.astype(jnp.int32),
+        n_restseg_miss=s0.n_restseg_miss
+        + (rs_probed & ~rs_hit).astype(jnp.int32),
+        n_restseg_mig=s0.n_restseg_mig + rs_mig,
+        n_restseg_conflict=s0.n_restseg_conflict + rs_conf,
+        sum_restseg_cyc=s0.sum_restseg_cyc + rs_cyc.astype(jnp.float32),
+        hist_restseg=s0.hist_restseg.at[rs_bucket].add(
+            rs_probed.astype(jnp.int32)),
     )
 
 

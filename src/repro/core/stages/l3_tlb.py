@@ -12,16 +12,22 @@ class L3TLBStage(Stage):
 
     def lookup(self, cfg, st, req, need):
         lat = cfg.l3tlb_lat if req.dyn is None else req.dyn.l3tlb_lat
+        # dyn gate: a ladder lane without a hardware L3 TLB neither pays
+        # the probe latency nor touches the (never-filled) structure
+        len_ = None if req.dyn is None else req.dyn.l3tlb_en
+        probe = need if len_ is None else need & len_
         h3, w3, s3 = lookup(st.l3tlb, req.key2)
-        l3hit = need & h3
+        l3hit = probe & h3
         l3tlb = st.l3tlb._replace(meta=st.l3tlb.meta.at[s3, w3].set(
             jnp.where(l3hit, req.now, st.l3tlb.meta[s3, w3])))
         st = st._replace(l3tlb=l3tlb)
         # probe latency is paid by every access that reaches this level
-        return st, StageResult(hit=l3hit, cycles=jnp.where(need, lat, 0),
+        return st, StageResult(hit=l3hit, cycles=jnp.where(probe, lat, 0),
                                info={})
 
     def fill(self, cfg, st, req, out):
         walk_en = out["_walk"].info["walk_en"]
+        if req.dyn is not None:
+            walk_en = walk_en & req.dyn.l3tlb_en
         l3t, _, _ = insert_lru(st.l3tlb, req.key2, req.now, walk_en)
         return st._replace(l3tlb=l3t)

@@ -19,15 +19,19 @@ class POMStage(Stage):
     name = "pom"
 
     def lookup(self, cfg, st, req, need):
+        # dyn gate: a non-POM ladder lane must not fetch POM lines through
+        # the caches (access_pte mutates L2/L3) nor probe the shadow assoc
+        pen = None if req.dyn is None else req.dyn.pom_en
+        probe = need if pen is None else need & pen
         pom_line = POM_BASE + (
             (req.key2 & ((cfg.pom_sets * cfg.pom_ways) - 1)) >> 2)
         hier, pc_cyc, _ = access_pte(
             st.hier, pom_line, req.pressure, cfg.tlb_aware, cfg.lat,
-            need, bt=BT_TLB4, geom=l2_geom_of(req.dyn),
+            probe, bt=BT_TLB4, geom=l2_geom_of(req.dyn),
         )
         st = st._replace(hier=hier)
         hp, wp, sp = lookup(st.pom, req.key2)
-        pomhit = need & hp
+        pomhit = probe & hp
         pom = st.pom._replace(meta=st.pom.meta.at[sp, wp].set(
             jnp.where(pomhit, req.now, st.pom.meta[sp, wp])))
         st = st._replace(pom=pom)
@@ -38,6 +42,9 @@ class POMStage(Stage):
         miss2 = out["l2_tlb"].need
         ev_tag = out["l2_tlb"].info["ev_tag"]
         ev_valid = out["l2_tlb"].info["ev_valid"]
+        if req.dyn is not None:
+            walk_en = walk_en & req.dyn.pom_en
+            ev_valid = ev_valid & req.dyn.pom_en
         pom2, _, _ = insert_lru(st.pom, req.key2, req.now, walk_en)
         pom2, _, _ = insert_lru(pom2, ev_tag, req.now, miss2 & ev_valid)
         return st._replace(pom=pom2)

@@ -3,11 +3,17 @@ benchmark suite needs.  Run as ``python -m repro.sim.sweep`` (results
 land in .sim_cache and benchmarks read them instantly).
 
 Shape-compatible system ladders are discovered from the registry
-(``systems.LADDERS``) — e.g. the 18-system radix/victima family
-(L2-TLB sizes incl. CACTI variants + the Fig. 25 L2-cache sizes) and
-the L3-TLB latency trio — and filled by ONE compiled vmapped call each
-via ``run_ladder``; the remaining systems run through the per-system
-batched path.
+(``systems.LADDERS``) — e.g. the 26-system native family (radix /
+victima / utopia, L2-TLB sizes incl. CACTI variants, the Fig. 25
+L2-cache sizes, POM and the L3-TLB latency trio) — and filled by ONE
+compiled vmapped call each via ``run_ladder``; the remaining systems
+run through the per-system batched path.
+
+CLI: positional system names and/or ``--tags native,ablation`` to
+select registry subsets by tag without listing names, e.g.
+
+    python -m repro.sim.sweep --tags utopia
+    python -m repro.sim.sweep radix --tags sensitivity
 """
 from __future__ import annotations
 
@@ -24,6 +30,8 @@ N = int(os.environ.get("REPRO_SIM_N", 150_000))
 SYSTEMS = [
     "radix",
     "victima",
+    "utopia",
+    "utopia_victima",
     "pom",
     "l2tlb_64k",
     "l2tlb_128k",
@@ -51,18 +59,54 @@ SYSTEMS = [
     "radix_l2_1m",
     "radix_l2_4m",
     "radix_l2_8m",
+    "utopia_rs8",
+    "utopia_rs32",
+    "utopia_virt",
 ]
 
 
+def parse_args(args):
+    """Split a CLI arg list into (system names, tags).
+
+    ``--tags native,ablation`` (or ``--tags=...``) selects every system
+    carrying any of the given registry tags; positional names add
+    individual systems on top.
+    """
+    names, tags = [], []
+    it = iter(args or [])
+    for a in it:
+        if a == "--tags":
+            val = next(it, None)
+            if val is None:
+                raise SystemExit("--tags needs a comma-separated value")
+            tags += [t for t in val.split(",") if t]
+        elif a.startswith("--tags="):
+            tags += [t for t in a.split("=", 1)[1].split(",") if t]
+        elif a.startswith("-"):
+            raise SystemExit(f"unknown option {a!r} (only --tags)")
+        else:
+            names.append(a)
+    return names, tags
+
+
 def main(selected=None):
-    selected = selected or SYSTEMS
-    # validate CLI names BEFORE any simulation: a typo used to burn the
-    # full ladder compile and then die with a KeyError mid-sweep
+    selected, tags = parse_args(selected)
+    # validate CLI names/tags BEFORE any simulation: a typo used to burn
+    # the full ladder compile and then die with a KeyError mid-sweep
     unknown = sorted(set(selected) - set(systems.REGISTRY))
     if unknown:
         raise SystemExit(
             f"unknown system(s): {', '.join(unknown)}; registered: "
             f"{', '.join(sorted(systems.REGISTRY))}")
+    all_tags = {t for s in systems.REGISTRY.values() for t in s.tags}
+    bad_tags = sorted(set(tags) - all_tags)
+    if bad_tags:
+        raise SystemExit(
+            f"unknown tag(s): {', '.join(bad_tags)}; known: "
+            f"{', '.join(sorted(all_tags))}")
+    for t in tags:
+        selected += [n for n in systems.names(t) if n not in selected]
+    selected = selected or SYSTEMS
     t00 = time.time()
     done: set[str] = set()
     # batched ladders first: one compilation covers many systems.  A

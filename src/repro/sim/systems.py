@@ -4,8 +4,10 @@ Each ``System`` names its translation-pipeline stage composition (see
 repro.core.stages) plus the SimConfig overrides that size it.  Ladders
 are discovered automatically (``discover_ladders``): systems whose
 configs differ only in ``DYN_FIELDS`` (L2-TLB geometry/latency, L3-TLB
-latency, L2-*cache* geometry, the dyn-gateable victima flag) batch into
-ONE compiled, vmapped call per ladder (mmu.simulate_systems).
+latency, L2-*cache* geometry, RestSeg associativity, and the
+dyn-gateable victima/restseg/l3_tlb/pom stage flags) batch into ONE
+compiled, vmapped call per ladder (mmu.simulate_systems) — the whole
+radix/victima/utopia/POM/L3-TLB native family shares one compile.
 
 Adding a new translation scheme = writing a stage module + registering
 a System here; see docs/architecture.md.
@@ -25,9 +27,12 @@ _RADIX = ("l1_tlb", "l2_tlb", "ptw")
 _VICTIMA = ("l1_tlb", "l2_tlb", "victima", "ptw")
 _L3 = ("l1_tlb", "l2_tlb", "l3_tlb", "ptw")
 _POM = ("l1_tlb", "l2_tlb", "pom", "ptw")
+_UTOPIA = ("l1_tlb", "l2_tlb", "restseg", "ptw")
+_UTOPIA_VICTIMA = ("l1_tlb", "l2_tlb", "victima", "restseg", "ptw")
 _NP = ("l1_tlb", "l2_tlb", "ptw2d")
 _VICTIMA_NP = ("l1_tlb", "l2_tlb", "victima", "ptw2d")
 _POM_NP = ("l1_tlb", "l2_tlb", "pom", "ptw2d")
+_UTOPIA_NP = ("l1_tlb", "l2_tlb", "restseg", "ptw2d")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,6 +130,24 @@ for _n, _sets in [("1m", 1024), ("4m", 4096), ("8m", 8192)]:
 register("radix_collect", _RADIX, "radix + per-page feature collection",
          tags=("native", "collect"), collect=True)
 
+# ------------------------------------------------------------- utopia
+# Hybrid RestSeg/FlexSeg mapping (PAPERS.md): set-associative RestSegs
+# resolve translations with one near-free tag probe; the FlexSeg falls
+# back to the radix walkers.  The PTW-CP-guided migration engine shares
+# Victima's predictor, so the combined system costs no extra hardware.
+register("utopia", _UTOPIA, "hybrid RestSeg/FlexSeg mapping + "
+         "PTW-CP-guided page migration", tags=("native", "headline",
+         "utopia"), utopia=True)
+register("utopia_victima", _UTOPIA_VICTIMA, "Utopia RestSegs + Victima "
+         "TLB blocks in L2$ (shared PTW-CP)", tags=("native", "utopia"),
+         utopia=True, victima=True)
+# RestSeg-associativity sensitivity ladder (joins the radix/victima
+# family automatically via the restseg_ways Dyn field)
+for _w in (8, 32):
+    register(f"utopia_rs{_w}", _UTOPIA, f"Utopia with {_w}-way RestSegs",
+             tags=("native", "sensitivity", "utopia"),
+             utopia=True, restseg_ways=_w)
+
 # --------------------------------------------------------------- virtualized
 register("np", _NP, "nested paging: 2-D walk + nested TLB",
          tags=("virt",), virt=True)
@@ -133,6 +156,9 @@ register("victima_virt", _VICTIMA_NP, "Victima under nested paging "
          virt=True, victima=True)
 register("pom_virt", _POM_NP, "POM-TLB under nested paging",
          tags=("virt",), virt=True, pom=True)
+register("utopia_virt", _UTOPIA_NP, "Utopia under nested paging (guest "
+         "RestSegs short-circuit the 2-D walk)", tags=("virt", "utopia"),
+         virt=True, utopia=True)
 register("isp", _RADIX, "ideal shadow paging: 1-D walk, free updates",
          tags=("virt",), virt=True, ideal_shadow=True)
 
@@ -147,9 +173,14 @@ register("isp", _RADIX, "ideal shadow paging: 1-D walk, free updates",
 
 # stages that a batched ladder can switch off per-lane via a Dyn gate
 # (the stage still runs compiled, but its state writes are masked to a
-# bit-exact no-op): stage name -> (SimConfig flag, Dyn field)
+# bit-exact no-op): stage name -> (SimConfig field, Dyn gate).  The
+# config field is how dyn_of derives the gate (l3_tlb gates on
+# l3tlb_sets > 0; the rest on their bool flag).
 DYN_GATED_STAGES: dict[str, tuple[str, str]] = {
     "victima": ("victima", "victima_en"),
+    "restseg": ("utopia", "utopia_en"),
+    "l3_tlb": ("l3tlb_sets", "l3tlb_en"),
+    "pom": ("pom", "pom_en"),
 }
 
 
@@ -181,9 +212,10 @@ def ladder_base_config(ladder: str | None = None, members=None) -> SimConfig:
     """Static config for a ladder: structures at the ladder maximum.
 
     Validates shape-compatibility — members may differ only in
-    DYN_FIELDS (everything else must match the first member).  Gated
-    stage flags are ORed so the base composition contains every stage
-    any member needs (lanes without it mask it off via Dyn).
+    DYN_FIELDS (everything else must match the first member).  Every dyn
+    field takes its ladder maximum (bool stage flags are ORed so the
+    base composition contains every stage any member needs; lanes
+    without it mask it off via their Dyn gate).
     """
     members = members or LADDERS[ladder]
     cfgs = [config(n) for n in members]
@@ -193,14 +225,28 @@ def ladder_base_config(ladder: str | None = None, members=None) -> SimConfig:
         raise ValueError(
             f"ladder {ladder or members[0]!r} members differ beyond "
             f"{DYN_FIELDS}")
-    return dataclasses.replace(
-        cfgs[0],
-        l2tlb_sets=max(c.l2tlb_sets for c in cfgs),
-        l2tlb_ways=max(c.l2tlb_ways for c in cfgs),
-        l2_sets=max(c.l2_sets for c in cfgs),
-        l2_ways=max(c.l2_ways for c in cfgs),
-        victima=any(c.victima for c in cfgs),
-    )
+    # the L3 TLB has no dyn set mask (only an on/off gate + latency), so
+    # every member that HAS one must match the base allocation exactly
+    l3max = max(c.l3tlb_sets for c in cfgs)
+    for n, c in zip(members, cfgs):
+        if c.l3tlb_sets not in (0, l3max):
+            raise ValueError(
+                f"ladder member {n!r}: l3tlb_sets={c.l3tlb_sets} differs "
+                f"from the ladder maximum {l3max} (the L3 TLB is "
+                f"gateable but not geometry-virtualized)")
+    return dyn_base_config(cfgs)
+
+
+def dyn_base_config(cfgs) -> SimConfig:
+    """The maximal static allocation covering every config's live view:
+    each DYN_FIELDS entry takes its maximum (bool stage flags are ORed,
+    so the base composition contains every gated stage any cfg needs)."""
+    maxima = {}
+    for f in DYN_FIELDS:
+        vals = [getattr(c, f) for c in cfgs]
+        maxima[f] = any(vals) if isinstance(getattr(SimConfig(), f), bool) \
+            else max(vals)
+    return dataclasses.replace(cfgs[0], **maxima)
 
 
 def ladder_dyn(members) -> Dyn:

@@ -9,13 +9,16 @@ to a statically allocated smaller structure:
 - caches.L2Geom through l2_lookup / l2_insert / l2_retag_to_tlb /
   l2_touch and the access_data / access_pte composite paths (this PR)
 
-Plus the runner satellites: run() and run_batch() must write
-byte-identical cache entries for the same key, and _key must digest
-non-JSON override values (Lat, numpy/jnp scalars) without aliasing.
+Plus the Utopia RestSeg invariants (occupancy never exceeds the live
+way count; a RestSeg hit resolves with ZERO walker cycles) and the
+runner satellites: run() and run_batch() must write byte-identical
+cache entries for the same key, and _key must digest non-JSON override
+values (Lat, numpy/jnp scalars) without aliasing.
 """
 import dataclasses
 import os
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -153,6 +156,89 @@ def test_hier_access_paths_masked_view_equals_small_static():
     assert np.array_equal(np.asarray(big.l3.tags), np.asarray(small.l3.tags))
     assert np.array_equal(np.asarray(big.l1d.tags),
                           np.asarray(small.l1d.tags))
+
+
+# ------------------------------------------------------- utopia restseg
+
+
+def test_restseg_masked_view_equals_small_static():
+    """The RestSeg migrate/probe path (insert_lru_dyn + lookup_dyn under
+    a way limit) over an oversized allocation == a statically small
+    RestSeg, and occupancy never exceeds the live way count."""
+    rng = np.random.default_rng(SEED)
+    SETS, WAYS = 8, 4
+    big = assoc.make(SETS, 4 * WAYS)   # ladder-maximum way allocation
+    small = assoc.make(SETS, WAYS)
+    mask = jnp.int32(SETS - 1)
+    ways = jnp.int32(WAYS)
+    for t in range(300):
+        vpn = jnp.int32(rng.integers(0, 1 << 16))
+        now = jnp.int32(t)
+        if rng.random() < 0.5:  # probe (+ LRU touch on hit)
+            hb, wb, sb = assoc.lookup_dyn(big, vpn, mask, ways)
+            hs, ws, ss = assoc.lookup(small, vpn)
+            assert bool(hb) == bool(hs), t
+            if bool(hs):
+                assert int(wb) == int(ws) and int(sb) == int(ss)
+                big = assoc.touch_lru(big, sb, wb, now)
+                small = assoc.touch_lru(small, ss, ws, now)
+        else:  # migration; a conflict demotes the LRU resident
+            mig = bool(rng.random() < 0.8)
+            big, _, conf_b = assoc.insert_lru_dyn(big, vpn, now, mask,
+                                                  ways, mig)
+            small, _, conf_s = assoc.insert_lru(small, vpn, now, mig)
+            assert bool(conf_b) == bool(conf_s), t
+        occupancy = np.asarray(big.valid).sum(axis=1)
+        assert occupancy.max() <= WAYS, t
+    assert np.array_equal(np.asarray(big.tags)[:, :WAYS],
+                          np.asarray(small.tags))
+    assert not np.asarray(big.valid)[:, WAYS:].any()
+
+
+def _simulate_final_state(cfg, trace, dyn=None):
+    from repro.core.mmu import make_state, make_step
+
+    step = make_step(cfg, dyn=dyn)
+
+    @jax.jit
+    def run(tr):
+        st, _ = jax.lax.scan(step, make_state(cfg), tr)
+        return st
+
+    return run(trace)
+
+
+def test_restseg_migration_invariants():
+    """End-to-end utopia run: every RestSeg hit is walk-free (hits +
+    demand walks exactly cover the L2-TLB misses), migrations only
+    follow walks, conflicts only follow migrations — and under a dyn
+    way limit nothing is ever resident outside the live ways."""
+    from golden_trace import GOLDEN_CFG, golden_trace
+    from repro.core.mmu import simulate
+    from repro.core.stages import dyn_of
+
+    cfg = dataclasses.replace(GOLDEN_CFG, utopia=True, restseg4_sets=16,
+                              restseg2_sets=8, restseg_ways=4)
+    trace = {k: jnp.asarray(v) for k, v in golden_trace(n=2000).items()}
+    stats, _ = simulate(cfg, trace)
+    hits = int(stats.n_restseg_hit)
+    assert hits > 0
+    # RestSeg hit => zero walk cycles: walks + hits partition the misses
+    assert hits + int(stats.n_demand_ptw) == int(stats.n_l2tlb_miss)
+    assert hits + int(stats.n_restseg_miss) == int(stats.n_l2tlb_miss)
+    assert int(stats.n_restseg_mig) <= int(stats.n_demand_ptw)
+    assert int(stats.n_restseg_conflict) <= int(stats.n_restseg_mig)
+    assert int(np.asarray(stats.hist_restseg).sum()) \
+        == hits + int(stats.n_restseg_miss)
+
+    # dyn way-limited run: occupancy stays inside the live view
+    ways_alloc = dataclasses.replace(cfg, restseg_ways=8)
+    st = _simulate_final_state(ways_alloc, trace, dyn=dyn_of(cfg))
+    for rs in (st.restseg4, st.restseg2):
+        valid = np.asarray(rs.valid)
+        assert valid.sum(axis=1).max() <= cfg.restseg_ways
+        assert not valid[:, cfg.restseg_ways:].any()
+    assert np.asarray(st.restseg4.valid).any()  # migrations landed
 
 
 # --------------------------------------------------- path-independent cache

@@ -7,15 +7,18 @@
   bit-for-bit on a fixed seed (tests/golden/mmu_stats.json);
 - a batched (vmapped) ladder run is bit-identical to per-system runs —
   for the L2-TLB geometry Dyn fields, the L2-*cache* geometry view
-  (Fig. 25 family), the per-lane victima gate, and the virtualized
-  2-D-walk pair;
+  (Fig. 25 family), the per-lane victima/restseg/l3_tlb/pom gates, and
+  the virtualized 2-D-walk family;
 - ladders are DISCOVERED from DYN_FIELDS-compatibility of registry
-  entries (no hand-maintained member lists).
+  entries (no hand-maintained member lists), and the discovered
+  families' membership is pinned (a registry entry silently falling out
+  of a batched family is a regression).
 """
 import dataclasses
 import json
 import os
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -23,7 +26,7 @@ import pytest
 from golden_trace import (GOLDEN_CFG, GOLDEN_SYSTEMS, golden_trace,
                           stats_to_jsonable)
 from repro.core.mmu import simulate, simulate_systems
-from repro.core.stages import (Dyn, STAGES, WALK_STAGES, default_stages,
+from repro.core.stages import (STAGES, WALK_STAGES, default_stages, dyn_of,
                                make_state)
 from repro.sim import systems
 
@@ -45,11 +48,14 @@ def _tiny_config(name):
         cfg = dataclasses.replace(cfg, l3tlb_sets=16, l3tlb_ways=4)
     if cfg.pom:
         cfg = dataclasses.replace(cfg, pom_sets=16, pom_ways=4)
+    if cfg.utopia:
+        cfg = dataclasses.replace(cfg, restseg4_sets=16, restseg2_sets=8,
+                                  restseg_ways=min(cfg.restseg_ways, 8))
     return cfg
 
 
 def test_registry_compositions_are_canonical():
-    assert len(systems.REGISTRY) >= 29
+    assert len(systems.REGISTRY) >= 34
     for name, sys_ in systems.REGISTRY.items():
         assert sys_.stages == default_stages(sys_.config()), name
         assert sys_.stages[-1] in WALK_STAGES, name
@@ -141,6 +147,12 @@ def test_pipeline_matches_golden_snapshot():
             assert got[field] == want, (name, field, got[field], want)
 
 
+def _stack_dyns(cfgs):
+    """Per-config Dyn scalars stacked into [S]-leaves (via dyn_of, so the
+    field-to-config mapping lives in exactly one place)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *[dyn_of(c) for c in cfgs])
+
+
 def test_batched_ladder_matches_single_runs(tiny_trace):
     """vmapped multi-system sweep == per-system static runs, bit-for-bit
     (covers set-masking, way-limiting, and dynamic latency)."""
@@ -148,19 +160,8 @@ def test_batched_ladder_matches_single_runs(tiny_trace):
                 dict(l2tlb_sets=16, l2tlb_ways=4, l2tlb_lat=17),
                 dict(l2tlb_sets=16, l2tlb_ways=8, l2tlb_lat=23)]
     base = dataclasses.replace(GOLDEN_CFG, l2tlb_sets=16, l2tlb_ways=8)
-    dyns = Dyn(
-        l2tlb_set_mask=jnp.asarray(
-            [v["l2tlb_sets"] - 1 for v in variants], jnp.int32),
-        l2tlb_ways=jnp.asarray(
-            [v["l2tlb_ways"] for v in variants], jnp.int32),
-        l2tlb_lat=jnp.asarray(
-            [v["l2tlb_lat"] for v in variants], jnp.int32),
-        l3tlb_lat=jnp.asarray([base.l3tlb_lat] * len(variants), jnp.int32),
-        l2_set_mask=jnp.asarray([base.l2_sets - 1] * len(variants),
-                                jnp.int32),
-        l2_ways=jnp.asarray([base.l2_ways] * len(variants), jnp.int32),
-        victima_en=jnp.asarray([base.victima] * len(variants), jnp.bool_),
-    )
+    dyns = _stack_dyns(
+        [dataclasses.replace(GOLDEN_CFG, **v) for v in variants])
     traces = {k: jnp.stack([v, v], axis=1) for k, v in tiny_trace.items()}
     per, extras = simulate_systems(base, dyns, traces)
     for si, v in enumerate(variants):
@@ -175,22 +176,8 @@ def test_batched_ladder_matches_single_runs(tiny_trace):
 def _ladder_equivalence(base_cfg, variants, tiny_trace):
     """Batched (vmapped Dyn) run == per-variant static runs, bit-for-bit."""
     cfgs = [dataclasses.replace(base_cfg, **v) for v in variants]
-    dyns = Dyn(
-        l2tlb_set_mask=jnp.asarray([c.l2tlb_sets - 1 for c in cfgs],
-                                   jnp.int32),
-        l2tlb_ways=jnp.asarray([c.l2tlb_ways for c in cfgs], jnp.int32),
-        l2tlb_lat=jnp.asarray([c.l2tlb_lat for c in cfgs], jnp.int32),
-        l3tlb_lat=jnp.asarray([c.l3tlb_lat for c in cfgs], jnp.int32),
-        l2_set_mask=jnp.asarray([c.l2_sets - 1 for c in cfgs], jnp.int32),
-        l2_ways=jnp.asarray([c.l2_ways for c in cfgs], jnp.int32),
-        victima_en=jnp.asarray([c.victima for c in cfgs], jnp.bool_),
-    )
-    base = dataclasses.replace(
-        base_cfg,
-        l2_sets=max(c.l2_sets for c in cfgs),
-        l2_ways=max(c.l2_ways for c in cfgs),
-        victima=any(c.victima for c in cfgs),
-    )
+    dyns = _stack_dyns(cfgs)
+    base = systems.dyn_base_config(cfgs)
     traces = {k: jnp.stack([v], axis=1) for k, v in tiny_trace.items()}
     per, _ = simulate_systems(base, dyns, traces)
     for si, c in enumerate(cfgs):
@@ -213,11 +200,86 @@ def test_batched_dyn_l2_cache_matches_single_runs(tiny_trace):
         tiny_trace)
 
 
+_TINY_RS = dict(restseg4_sets=16, restseg2_sets=8, restseg_ways=4)
+
+
 def test_batched_dyn_virt_matches_single_runs(tiny_trace):
-    """np and victima_virt lanes share one compiled 2-D-walk ladder: the
-    nested-TLB-block machinery dyn-gates off bit-exactly."""
-    vbase = dataclasses.replace(GOLDEN_CFG, virt=True, l3_sets=16)
+    """np, victima_virt, pom_virt and utopia_virt lanes share one
+    compiled 2-D-walk ladder: the nested-TLB-block, POM and RestSeg
+    machinery dyn-gates off bit-exactly."""
+    vbase = dataclasses.replace(GOLDEN_CFG, virt=True, l3_sets=16,
+                                pom_sets=16, pom_ways=4, **_TINY_RS)
     _ladder_equivalence(
         vbase,
-        [dict(victima=False), dict(victima=True, l2_sets=16, l2_ways=4)],
+        [dict(victima=False), dict(victima=True, l2_sets=16, l2_ways=4),
+         dict(utopia=True), dict(pom=True)],
         tiny_trace)
+
+
+def test_batched_dyn_utopia_matches_single_runs(tiny_trace):
+    """Utopia lanes riding the batched family: the RestSeg probe/
+    migration machinery dyn-gates off bit-exactly on non-utopia lanes,
+    and the restseg_ways view matches smaller static RestSegs."""
+    base_cfg = dataclasses.replace(GOLDEN_CFG, **_TINY_RS)
+    _ladder_equivalence(
+        base_cfg,
+        [dict(utopia=True, restseg_ways=4),
+         dict(),  # plain radix lane: utopia machinery masked off
+         dict(utopia=True, restseg_ways=8),
+         dict(utopia=True, victima=True, restseg_ways=8)],
+        tiny_trace)
+
+
+def test_batched_dyn_l3_pom_gates_match_single_runs(tiny_trace):
+    """The l3_tlb and pom stages dyn-gate per lane: L3/POM systems and a
+    plain radix lane share one compiled step, bit-exactly."""
+    base_cfg = dataclasses.replace(GOLDEN_CFG, l3tlb_ways=4,
+                                   pom_sets=16, pom_ways=4)
+    _ladder_equivalence(
+        base_cfg,
+        [dict(), dict(l3tlb_sets=16), dict(pom=True),
+         dict(l3tlb_sets=16, l3tlb_lat=24)],
+        tiny_trace)
+
+
+def test_batched_all_gates_combined_matches_single_runs(tiny_trace):
+    """The production shape: the discovered native family's base
+    composition carries ALL four gated stages (victima + restseg +
+    l3_tlb + pom) at once, so one lane of each flavour must still be
+    bit-identical to its static run under the combined fill_order
+    (l2_tlb -> victima -> restseg -> pom -> l3_tlb -> l1_tlb)."""
+    base_cfg = dataclasses.replace(GOLDEN_CFG, l3tlb_ways=4,
+                                   pom_sets=16, pom_ways=4, **_TINY_RS)
+    _ladder_equivalence(
+        base_cfg,
+        [dict(),  # plain radix: every gated stage masked off
+         dict(utopia=True, victima=True),
+         dict(pom=True),
+         dict(l3tlb_sets=16)],
+        tiny_trace)
+
+
+def test_ladder_discovery_regression():
+    """Pin the discovered families: a registry entry silently falling out
+    of its batched ladder (e.g. a new override knocking it off the
+    DYN_FIELDS-compatible set) is a sweep-throughput regression, not a
+    crash — so assert count and membership explicitly."""
+    ladders = systems.LADDERS
+    assert set(ladders) == {"radix", "np"}, ladders
+    native = set(ladders["radix"])
+    assert native >= {
+        "radix", "victima", "pom", "utopia", "utopia_victima",
+        "utopia_rs8", "utopia_rs32",
+        "l3tlb_64k_15", "l3tlb_64k_24", "l3tlb_64k_39",
+        "l2tlb_3k", "l2tlb_128k", "l2tlb_64k_real",
+        "victima_l2_8m", "radix_l2_8m",
+    }, native
+    assert len(native) == 26, sorted(native)
+    assert set(ladders["np"]) == {"np", "victima_virt", "pom_virt",
+                                  "utopia_virt"}
+    # every registered system is either a ladder member or one of the
+    # known singletons (configs differing beyond DYN_FIELDS)
+    covered = {m for mem in ladders.values() for m in mem}
+    singles = set(systems.REGISTRY) - covered
+    assert singles == {"victima_agnostic", "victima_noptwcp",
+                       "radix_collect", "isp"}, singles
