@@ -8,16 +8,22 @@ missing is computed on demand.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
 
 from repro.core import metrics, timing
-from repro.sim import systems, trace_gen
+from repro.sim import runner, systems, trace_gen
 from repro.sim.runner import run_batch, run_ladder
 
-WLS = trace_gen.all_workloads()
-N = int(__import__("os").environ.get("REPRO_SIM_N", 150_000))
+# REPRO_SIM_WLS=bc,xs,rnd restricts the workload set (CI runs a small
+# deterministic subset to keep the sweep-perf artifact cheap)
+_WLS_ENV = os.environ.get("REPRO_SIM_WLS", "")
+WLS = ([w for w in _WLS_ENV.split(",") if w] if _WLS_ENV
+       else trace_gen.all_workloads())
+N = int(os.environ.get("REPRO_SIM_N", 150_000))
 
 # systems covered by a batched (vmapped) ladder run: the first _sys()
 # touching a ladder member fills the whole ladder in one compilation.
@@ -33,9 +39,9 @@ def _sys(name):
         # fill the whole ladder's cache in one batched compile; the timed
         # call below then measures this system's retrieval like any other
         # warm-cache system
-        run_ladder(_LADDER_OF[name], n=N)
+        run_ladder(_LADDER_OF[name], workloads=WLS, n=N)
     t0 = time.time()
-    out = run_batch(name, n=N)
+    out = run_batch(name, workloads=WLS, n=N)
     us = (time.time() - t0) * 1e6 / (N * len(WLS))
     return out, us
 
@@ -258,6 +264,50 @@ def utopia_comparison():
     return rows
 
 
+def _walks_issued(stats) -> float:
+    """Walks the system actually executed: demand walks PLUS Revelator's
+    overlapped verification walks (every speculative resolution runs
+    one; they are excluded from n_demand_ptw by design)."""
+    return (float(stats.n_demand_ptw) + float(stats.n_rev_hit)
+            + float(stats.n_rev_mispred))
+
+
+def scheme_comparison():
+    """Beyond-paper: the full translation-scheme matrix — radix /
+    Victima (reach) / Utopia (mapping) / Revelator (speculation) — on
+    shared hardware assumptions, all members of the ONE discovered
+    native ladder, so the whole table fills from a single compiled
+    vmapped call.  Victima/Utopia *eliminate* walks; Revelator *hides*
+    them (verification walks still execute, overlapped).  The table
+    reports both axes: critical-path PTW reduction (n_demand_ptw) and
+    walks-issued reduction (demand + verification) — for Revelator the
+    first is large and the second ~0, which IS the scheme's point."""
+    base, _ = _sys("radix")
+    rows = []
+    for tag in ("victima", "utopia", "revelator",
+                "utopia_victima", "revelator_victima"):
+        out, us = _sys(tag)
+        sp = _gmean_speedup(base, out)
+        red = float(np.mean([metrics.ptw_reduction(base[w][0], out[w][0])
+                             for w in WLS]))
+        issued = float(np.mean([
+            metrics.reduction(_walks_issued(base[w][0]),
+                              _walks_issued(out[w][0])) for w in WLS]))
+        rows.append((f"scheme_cmp_{tag}", us,
+                     f"{(sp-1)*100:+.1f}% vs radix, "
+                     f"{red*100:.0f}% fewer critical-path PTWs, "
+                     f"{issued*100:.0f}% fewer walks issued"))
+        if tag == "revelator":
+            cov = _avg(lambda s, sp: metrics.rev_coverage(s), out)
+            acc = _avg(lambda s, sp: metrics.rev_accuracy(s), out)
+            vc = _avg(lambda s, sp: metrics.avg_rev_verify_cycles(s), out)
+            rows.append(("scheme_cmp_rev_speculation", us,
+                         f"{cov*100:.0f}% of L2-TLB misses speculated "
+                         f"({acc*100:.0f}% verified correct, "
+                         f"{vc:.0f} cyc/verify overlapped)"))
+    return rows
+
+
 # ---------------------------------------------------------------- §9 virt
 
 
@@ -279,8 +329,8 @@ def fig28_guest_host_ptws():
     g = float(np.mean([metrics.ptw_reduction(base[w][0], out[w][0])
                        for w in WLS]))
     h = float(np.mean([
-        1.0 - float(out[w][0].n_host_ptw)
-        / max(float(base[w][0].n_host_ptw), 1.0) for w in WLS]))
+        metrics.reduction(base[w][0].n_host_ptw, out[w][0].n_host_ptw)
+        for w in WLS]))
     return [("fig28_guest_ptw_red", us, f"{g*100:.0f}% (paper 50%)"),
             ("fig28_host_ptw_red", us, f"{h*100:.0f}% (paper 99%)")]
 
@@ -296,6 +346,30 @@ def fig29_virt_miss_latency():
         rows.append((f"fig29_virt_l2miss_red_{tag}", us,
                      f"{(1-n/b)*100:.0f}% (paper ~{paperv}%)"))
     return rows
+
+
+def write_sweep_artifact(path: str | None = None) -> str:
+    """Dump the sweep-throughput trajectory to BENCH_sweep.json.
+
+    Records every batched ladder fill this process ran (compile +
+    simulate wall time, systems-per-compile) plus the registry's current
+    ladder shapes, so CI can diff sweep throughput across PRs — a
+    registry entry silently falling out of its batched family shows up
+    here as a shrunk systems-per-compile long before it costs minutes.
+    """
+    path = path or os.environ.get("REPRO_BENCH_SWEEP", "BENCH_sweep.json")
+    artifact = {
+        "schema": 1,
+        "sim_n": N,
+        "workloads": WLS,
+        "ladders": {lad: {"n_systems": len(members), "members": members}
+                    for lad, members in systems.LADDERS.items()},
+        "ladder_fills": runner.LADDER_PERF,
+    }
+    with open(path, "w") as f:
+        json.dump(artifact, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
 
 
 ALL = [
@@ -314,6 +388,7 @@ ALL = [
     fig26_policy,
     ablation_ptwcp,
     utopia_comparison,
+    scheme_comparison,
     fig27_virt_speedup,
     fig28_guest_host_ptws,
     fig29_virt_miss_latency,

@@ -29,6 +29,9 @@ def main() -> None:
             failures += 1
             print(f"{fn.__name__},nan,ERROR {e!r}", flush=True)
             traceback.print_exc(file=sys.stderr)
+    # sweep-throughput trajectory (per-ladder compile+sim wall times,
+    # systems-per-compile) — CI uploads it to track regressions
+    print(f"# wrote {paper.write_sweep_artifact()}", file=sys.stderr)
     if failures:
         sys.exit(1)
 

@@ -22,9 +22,21 @@ def avg_l2tlb_miss_latency(stats) -> float:
     return float(stats.sum_l2miss_cyc) / max(float(stats.n_l2tlb_miss), 1.0)
 
 
+def reduction(base_n: float, new_n: float) -> float:
+    """1 - new/base with a sane degenerate case: a baseline of zero means
+    there is nothing to reduce, so the reduction is 0.0 — NOT the large
+    negative number that ``1 - new/max(base, 1)`` used to produce.
+
+    (The ``max(x, 1.0)`` guards in the *average* metrics above/below are
+    safe as-is: whenever their denominator is 0 the numerator provably
+    is too — no walks means no walk cycles — so they yield 0.0.)
+    """
+    b = float(base_n)
+    return 0.0 if b == 0.0 else 1.0 - float(new_n) / b
+
+
 def ptw_reduction(base_stats, new_stats) -> float:
-    b = float(base_stats.n_demand_ptw)
-    return 1.0 - float(new_stats.n_demand_ptw) / max(b, 1.0)
+    return reduction(base_stats.n_demand_ptw, new_stats.n_demand_ptw)
 
 
 def restseg_hit_rate(stats) -> float:
@@ -44,6 +56,27 @@ def restseg_conflict_rate(stats) -> float:
 def avg_restseg_probe_cycles(stats) -> float:
     probes = float(stats.n_restseg_hit) + float(stats.n_restseg_miss)
     return float(stats.sum_restseg_cyc) / max(probes, 1.0)
+
+
+def rev_coverage(stats) -> float:
+    """Fraction of L2-TLB misses the Revelator signature table resolved
+    speculatively (correct predictions AND mispredictions — both skip
+    the demand walker; a mispredict just pays the overlapped walk)."""
+    resolved = float(stats.n_rev_hit) + float(stats.n_rev_mispred)
+    return resolved / max(float(stats.n_l2tlb_miss), 1.0)
+
+
+def rev_accuracy(stats) -> float:
+    """Fraction of speculative translations that verified correct."""
+    resolved = float(stats.n_rev_hit) + float(stats.n_rev_mispred)
+    return float(stats.n_rev_hit) / max(resolved, 1.0)
+
+
+def avg_rev_verify_cycles(stats) -> float:
+    """Average verification-walk latency per speculative resolution
+    (overlapped: critical-path only on mispredict)."""
+    resolved = float(stats.n_rev_hit) + float(stats.n_rev_mispred)
+    return float(stats.sum_rev_verify_cyc) / max(resolved, 1.0)
 
 
 def translation_reach_mb(stats) -> float:

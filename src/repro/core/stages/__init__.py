@@ -19,13 +19,15 @@ from repro.core.stages.l3_tlb import L3TLBStage
 from repro.core.stages.nested import NestedWalkStage
 from repro.core.stages.pom import POMStage
 from repro.core.stages.ptw import RadixWalkStage
+from repro.core.stages.revelator import RevelatorStage
 from repro.core.stages.utopia import RestSegStage
 from repro.core.stages.victima import VictimaStage
 
 STAGES: dict[str, Stage] = {
     s.name: s for s in (
-        L1TLBStage(), L2TLBStage(), VictimaStage(), L3TLBStage(),
-        POMStage(), RestSegStage(), RadixWalkStage(), NestedWalkStage(),
+        L1TLBStage(), L2TLBStage(), RevelatorStage(), VictimaStage(),
+        L3TLBStage(), POMStage(), RestSegStage(), RadixWalkStage(),
+        NestedWalkStage(),
     )
 }
 
@@ -35,6 +37,9 @@ WALK_STAGES = ("ptw", "ptw2d")
 def default_stages(cfg: SimConfig) -> tuple[str, ...]:
     """Canonical stage composition implied by a SimConfig."""
     names = ["l1_tlb", "l2_tlb"]
+    if cfg.revelator:
+        names.append("rev")  # speculate right at the L2-TLB miss: a
+        #   correct prediction hides every later level AND the walk
     if cfg.victima:
         names.append("victima")
     if cfg.l3tlb_sets > 0:
@@ -53,8 +58,8 @@ def validate_stages(cfg: SimConfig, names: tuple[str, ...]) -> None:
     if tuple(names) != expect:
         raise ValueError(
             f"stage composition {names} inconsistent with config "
-            f"(expected {expect}: the victima/l3/pom/virt flags and the "
-            f"stage list must agree)")
+            f"(expected {expect}: the rev/victima/l3/pom/utopia/virt "
+            f"flags and the stage list must agree)")
 
 
 def fill_order(names: tuple[str, ...]) -> tuple[str, ...]:
@@ -72,6 +77,8 @@ def fill_order(names: tuple[str, ...]) -> tuple[str, ...]:
         else [walker, "l2_tlb"]
     if "restseg" in names:
         order.append("restseg")
+    if "rev" in names:
+        order.append("rev")  # enrollment reads post-walk counters too
     order += [n for n in ("pom", "l3_tlb") if n in names]
     order.append("l1_tlb")
     return tuple(order)

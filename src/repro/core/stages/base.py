@@ -72,6 +72,14 @@ class SimConfig:
     restseg4_sets: int = 8192    # 4K-page RestSeg: 128K entries, 16-way
     restseg2_sets: int = 256     # 2M-page RestSeg
     restseg_ways: int = 16
+    # --- Revelator hash-based speculative translation
+    revelator: bool = False
+    rev_sets: int = 4096         # signature table: 64K entries, 16-way
+    rev_ways: int = 16
+    rev_lat: int = 4             # hash + signature probe (near-zero)
+    rev_sig_bits: int = 20       # lossy signature width; aliasing between
+    #   pages whose hashes share the low rev_sig_bits is the deterministic
+    #   stand-in for the paper's frame-allocation mispredictions
     # --- caches
     l1_sets: int = 64
     l1_ways: int = 8
@@ -118,15 +126,17 @@ class Dyn(NamedTuple):
     restseg_ways: jax.Array    # int32 effective RestSeg ways
     l3tlb_en: jax.Array        # bool — hardware L3 TLB live on this lane
     pom_en: jax.Array          # bool — POM-TLB live on this lane
+    rev_en: jax.Array          # bool — Revelator speculative stage live
 
 
 # SimConfig fields a batched ladder may vary across members.  "victima",
-# "utopia", "pom" and "l3tlb_sets" are special: they are not geometry
-# scalars but dyn-*gateable* stage flags (see systems.DYN_GATED_STAGES) —
-# lanes lacking the stage mask off all its state writes bit-exactly.
+# "utopia", "pom", "l3tlb_sets" and "revelator" are special: they are not
+# geometry scalars but dyn-*gateable* stage flags (see
+# systems.DYN_GATED_STAGES) — lanes lacking the stage mask off all its
+# state writes bit-exactly.
 DYN_FIELDS = ("l2tlb_sets", "l2tlb_ways", "l2tlb_lat", "l3tlb_lat",
               "l2_sets", "l2_ways", "victima",
-              "utopia", "restseg_ways", "l3tlb_sets", "pom")
+              "utopia", "restseg_ways", "l3tlb_sets", "pom", "revelator")
 
 
 def dyn_of(cfg: SimConfig) -> Dyn:
@@ -143,6 +153,7 @@ def dyn_of(cfg: SimConfig) -> Dyn:
         restseg_ways=jnp.int32(cfg.restseg_ways),
         l3tlb_en=jnp.bool_(cfg.l3tlb_sets > 0),
         pom_en=jnp.bool_(cfg.pom),
+        rev_en=jnp.bool_(cfg.revelator),
     )
 
 
@@ -182,6 +193,14 @@ class Stats(NamedTuple):
     sum_restseg_cyc: jax.Array    # f32 — Σ RestSeg tag-probe cycles
     hist_restseg: jax.Array       # i32 [WALK_HIST_BUCKETS] — probe-latency
     #                               buckets (same 10-cycle grid as hist_walk)
+    # --- Revelator speculation (zero for systems without the stage)
+    n_rev_hit: jax.Array          # i32 — correct speculative translations
+    n_rev_mispred: jax.Array      # i32 — signature hits that mispredicted
+    n_rev_enroll: jax.Array       # i32 — pages enrolled post-walk
+    sum_rev_verify_cyc: jax.Array  # f32 — Σ verification-walk cycles
+    #                                (overlapped; critical only on mispredict)
+    hist_rev_verify: jax.Array    # i32 [WALK_HIST_BUCKETS] — verify-latency
+    #                               buckets (same 10-cycle grid as hist_walk)
 
 
 def zero_stats() -> Stats:
@@ -197,6 +216,9 @@ def zero_stats() -> Stats:
         n_restseg_hit=z, n_restseg_miss=z, n_restseg_mig=z,
         n_restseg_conflict=z, sum_restseg_cyc=f,
         hist_restseg=jnp.zeros((WALK_HIST_BUCKETS,), jnp.int32),
+        n_rev_hit=z, n_rev_mispred=z, n_rev_enroll=z,
+        sum_rev_verify_cyc=f,
+        hist_rev_verify=jnp.zeros((WALK_HIST_BUCKETS,), jnp.int32),
     )
 
 
@@ -221,6 +243,24 @@ def zero_feats(n: int) -> Feats:
     )
 
 
+class RevTable(NamedTuple):
+    """Revelator signature table: hashed VPN -> speculative frame.
+
+    ``tab`` is keyed by a *lossy* multiplicative-hash signature of the
+    size-tagged page id (so distinct pages can alias — the deterministic
+    misprediction source); ``vpn`` shadows the enrolled page id per way,
+    the ground truth the verification walk confirms against.
+    """
+
+    tab: Assoc       # tags = lossy signature, meta = LRU stamp
+    vpn: jax.Array   # int32 [S, W] — enrolled key2 per way
+
+
+def make_rev(n_sets: int, n_ways: int) -> RevTable:
+    return RevTable(tab=make(n_sets, n_ways),
+                    vpn=jnp.zeros((n_sets, n_ways), jnp.int32))
+
+
 class MMUState(NamedTuple):
     now: jax.Array
     l1d4: Assoc
@@ -233,6 +273,7 @@ class MMUState(NamedTuple):
     ntlb: Assoc
     restseg4: Assoc  # Utopia 4K-page RestSeg (tags = migrated vpn)
     restseg2: Assoc  # Utopia 2M-page RestSeg (tags = migrated vpn2)
+    rev: RevTable    # Revelator signature table (sized 1 when off)
     pc4: ptwcp.PageCounters
     pc2: ptwcp.PageCounters
     pch: ptwcp.PageCounters
@@ -256,6 +297,8 @@ def make_state(cfg: SimConfig) -> MMUState:
                       cfg.restseg_ways if cfg.utopia else 1),
         restseg2=make(cfg.restseg2_sets if cfg.utopia else 1,
                       cfg.restseg_ways if cfg.utopia else 1),
+        rev=make_rev(cfg.rev_sets if cfg.revelator else 1,
+                     cfg.rev_ways if cfg.revelator else 1),
         pc4=ptwcp.make_counters(cfg.n_pages4),
         pc2=ptwcp.make_counters(cfg.n_pages2),
         pch=ptwcp.make_counters(cfg.n_pagesh if cfg.virt else 1),
@@ -287,6 +330,25 @@ class StageResult(NamedTuple):
     #                           (fills may publish into their own dict)
     need: Any = None          # bool — still-unresolved mask AFTER this
     #                           stage (filled in by the driver)
+
+
+def ptwcp_walk_verdict(cfg: SimConfig, st: "MMUState", req: "Request",
+                       walk_en):
+    """Post-walk PTW-CP verdict shared by fill-time promotion engines
+    (Utopia's RestSeg migration, Revelator's enrollment).
+
+    Reads the *freshly trained* counters — callers run after whichever
+    fill owns the counter traffic (see ``stages.fill_order``) — and
+    applies the standard overrides: ``use_ptwcp=False`` promotes every
+    candidate, high L2$ MPKI (``req.l2_bypass``) bypasses the predictor.
+    """
+    idx4 = req.vpn & (cfg.n_pages4 - 1)
+    idx2 = req.vpn2 & (cfg.n_pages2 - 1)
+    pred = jnp.where(req.is2m,
+                     ptwcp.predict_page(st.pc2, idx2),
+                     ptwcp.predict_page(st.pc4, idx4))
+    pred = pred if cfg.use_ptwcp else jnp.bool_(True)
+    return walk_en & (pred | req.l2_bypass)
 
 
 class Stage:

@@ -31,6 +31,17 @@ def accum_stats(s0: Stats, st: MMUState, out, walk_res, trans, past_l2,
         rs_probed = rs_hit = jnp.bool_(False)
         rs_mig = rs_conf = rs_cyc = jnp.int32(0)
     rs_bucket = jnp.minimum(rs_cyc // 10, WALK_HIST_BUCKETS - 1)
+    if "rev" in out:
+        rv = out["rev"]
+        rv_hit = rv.hit
+        rv_correct = rv.info["correct"]
+        rv_mispred = rv.info["mispred"]
+        rv_enroll = rv.info["n_enroll"]
+        rv_vcyc = rv.info["verify_cyc"]
+    else:
+        rv_hit = rv_correct = rv_mispred = jnp.bool_(False)
+        rv_enroll = rv_vcyc = jnp.int32(0)
+    rv_bucket = jnp.minimum(rv_vcyc // 10, WALK_HIST_BUCKETS - 1)
     return Stats(
         n_access=s0.n_access + 1,
         n_l1tlb_hit=s0.n_l1tlb_hit + _hit32(out, "l1_tlb"),
@@ -61,6 +72,13 @@ def accum_stats(s0: Stats, st: MMUState, out, walk_res, trans, past_l2,
         sum_restseg_cyc=s0.sum_restseg_cyc + rs_cyc.astype(jnp.float32),
         hist_restseg=s0.hist_restseg.at[rs_bucket].add(
             rs_probed.astype(jnp.int32)),
+        n_rev_hit=s0.n_rev_hit + rv_correct.astype(jnp.int32),
+        n_rev_mispred=s0.n_rev_mispred + rv_mispred.astype(jnp.int32),
+        n_rev_enroll=s0.n_rev_enroll + rv_enroll,
+        sum_rev_verify_cyc=s0.sum_rev_verify_cyc
+        + rv_vcyc.astype(jnp.float32),
+        hist_rev_verify=s0.hist_rev_verify.at[rv_bucket].add(
+            rv_hit.astype(jnp.int32)),
     )
 
 

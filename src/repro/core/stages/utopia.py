@@ -27,12 +27,12 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core import ptwcp
 from repro.core.assoc import (insert_lru, insert_lru_dyn, lookup,
                               lookup_dyn)
 from repro.core.caches import BT_TLB4, access_pte
 from repro.core.page_table import RESTSEG2_BASE, RESTSEG4_BASE
-from repro.core.stages.base import Stage, StageResult, l2_geom_of
+from repro.core.stages.base import (Stage, StageResult, l2_geom_of,
+                                    ptwcp_walk_verdict)
 
 
 class RestSegStage(Stage):
@@ -81,18 +81,8 @@ class RestSegStage(Stage):
         verdict after their demand walk) into a RestSeg; a set conflict
         demotes the evicted resident back to the FlexSeg."""
         uen = None if req.dyn is None else req.dyn.utopia_en
-        walk_en = out["_walk"].info["walk_en"]
-
-        # post-walk PTW-CP verdict — the fill runs after the walker's /
-        # Victima's counter updates (see stages.fill_order), so this reads
-        # the same freshly trained counters Victima's install gate does
-        idx4 = req.vpn & (cfg.n_pages4 - 1)
-        idx2 = req.vpn2 & (cfg.n_pages2 - 1)
-        pred = jnp.where(req.is2m,
-                         ptwcp.predict_page(st.pc2, idx2),
-                         ptwcp.predict_page(st.pc4, idx4))
-        pred = pred if cfg.use_ptwcp else jnp.bool_(True)
-        mig = walk_en & (pred | req.l2_bypass)
+        mig = ptwcp_walk_verdict(cfg, st, req,
+                                 out["_walk"].info["walk_en"])
         if uen is not None:
             mig = mig & uen
         mig4 = mig & ~req.is2m

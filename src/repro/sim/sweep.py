@@ -3,9 +3,10 @@ benchmark suite needs.  Run as ``python -m repro.sim.sweep`` (results
 land in .sim_cache and benchmarks read them instantly).
 
 Shape-compatible system ladders are discovered from the registry
-(``systems.LADDERS``) — e.g. the 26-system native family (radix /
-victima / utopia, L2-TLB sizes incl. CACTI variants, the Fig. 25
-L2-cache sizes, POM and the L3-TLB latency trio) — and filled by ONE
+(``systems.LADDERS``) — e.g. the 28-system native family (radix /
+victima / utopia / revelator, L2-TLB sizes incl. CACTI variants, the
+Fig. 25 L2-cache sizes, POM and the L3-TLB latency trio) — and filled
+by ONE
 compiled vmapped call each via ``run_ladder``; the remaining systems
 run through the per-system batched path.
 
@@ -31,7 +32,9 @@ SYSTEMS = [
     "radix",
     "victima",
     "utopia",
+    "revelator",
     "utopia_victima",
+    "revelator_victima",
     "pom",
     "l2tlb_64k",
     "l2tlb_128k",
@@ -62,6 +65,7 @@ SYSTEMS = [
     "utopia_rs8",
     "utopia_rs32",
     "utopia_virt",
+    "revelator_virt",
 ]
 
 
@@ -72,16 +76,22 @@ def parse_args(args):
     carrying any of the given registry tags; positional names add
     individual systems on top.
     """
+    def _tag_list(val, flag):
+        # "--tags --foo" used to swallow the next OPTION as a tag list;
+        # flag-like values are always a CLI mistake, so error out
+        if val is None or val.startswith("-"):
+            raise SystemExit(
+                f"{flag} needs a comma-separated value"
+                + (f", got {val!r}" if val is not None else ""))
+        return [t for t in val.split(",") if t]
+
     names, tags = [], []
     it = iter(args or [])
     for a in it:
         if a == "--tags":
-            val = next(it, None)
-            if val is None:
-                raise SystemExit("--tags needs a comma-separated value")
-            tags += [t for t in val.split(",") if t]
+            tags += _tag_list(next(it, None), "--tags")
         elif a.startswith("--tags="):
-            tags += [t for t in a.split("=", 1)[1].split(",") if t]
+            tags += _tag_list(a.split("=", 1)[1], "--tags=")
         elif a.startswith("-"):
             raise SystemExit(f"unknown option {a!r} (only --tags)")
         else:

@@ -5,7 +5,7 @@ repro.core.stages) plus the SimConfig overrides that size it.  Ladders
 are discovered automatically (``discover_ladders``): systems whose
 configs differ only in ``DYN_FIELDS`` (L2-TLB geometry/latency, L3-TLB
 latency, L2-*cache* geometry, RestSeg associativity, and the
-dyn-gateable victima/restseg/l3_tlb/pom stage flags) batch into ONE
+dyn-gateable rev/victima/restseg/l3_tlb/pom stage flags) batch into ONE
 compiled, vmapped call per ladder (mmu.simulate_systems) — the whole
 radix/victima/utopia/POM/L3-TLB native family shares one compile.
 
@@ -29,6 +29,9 @@ _L3 = ("l1_tlb", "l2_tlb", "l3_tlb", "ptw")
 _POM = ("l1_tlb", "l2_tlb", "pom", "ptw")
 _UTOPIA = ("l1_tlb", "l2_tlb", "restseg", "ptw")
 _UTOPIA_VICTIMA = ("l1_tlb", "l2_tlb", "victima", "restseg", "ptw")
+_REV = ("l1_tlb", "l2_tlb", "rev", "ptw")
+_REV_VICTIMA = ("l1_tlb", "l2_tlb", "rev", "victima", "ptw")
+_REV_NP = ("l1_tlb", "l2_tlb", "rev", "ptw2d")
 _NP = ("l1_tlb", "l2_tlb", "ptw2d")
 _VICTIMA_NP = ("l1_tlb", "l2_tlb", "victima", "ptw2d")
 _POM_NP = ("l1_tlb", "l2_tlb", "pom", "ptw2d")
@@ -148,6 +151,20 @@ for _w in (8, 32):
              tags=("native", "sensitivity", "utopia"),
              utopia=True, restseg_ways=_w)
 
+# ------------------------------------------------------------ revelator
+# Hash-based speculative translation (PAPERS.md, arXiv 2508.02007): a
+# signature hit on L2-TLB miss resolves the translation at near-zero
+# latency while the walk verifies off the critical path; only a
+# mispredict pays the overlapped walk cost.  Enrollment reuses the
+# PTW-CP predictor, completing the scheme-comparison matrix (radix /
+# Victima / Utopia / Revelator) on shared hardware assumptions.
+register("revelator", _REV, "hash-based speculative translation + "
+         "verify-later walks", tags=("native", "headline", "revelator"),
+         revelator=True)
+register("revelator_victima", _REV_VICTIMA, "Revelator speculation over "
+         "Victima TLB blocks in L2$ (shared PTW-CP)",
+         tags=("native", "revelator"), revelator=True, victima=True)
+
 # --------------------------------------------------------------- virtualized
 register("np", _NP, "nested paging: 2-D walk + nested TLB",
          tags=("virt",), virt=True)
@@ -159,6 +176,9 @@ register("pom_virt", _POM_NP, "POM-TLB under nested paging",
 register("utopia_virt", _UTOPIA_NP, "Utopia under nested paging (guest "
          "RestSegs short-circuit the 2-D walk)", tags=("virt", "utopia"),
          virt=True, utopia=True)
+register("revelator_virt", _REV_NP, "Revelator under nested paging (a "
+         "correct prediction hides the whole 2-D walk)",
+         tags=("virt", "revelator"), virt=True, revelator=True)
 register("isp", _RADIX, "ideal shadow paging: 1-D walk, free updates",
          tags=("virt",), virt=True, ideal_shadow=True)
 
@@ -177,6 +197,7 @@ register("isp", _RADIX, "ideal shadow paging: 1-D walk, free updates",
 # config field is how dyn_of derives the gate (l3_tlb gates on
 # l3tlb_sets > 0; the rest on their bool flag).
 DYN_GATED_STAGES: dict[str, tuple[str, str]] = {
+    "rev": ("revelator", "rev_en"),
     "victima": ("victima", "victima_en"),
     "restseg": ("utopia", "utopia_en"),
     "l3_tlb": ("l3tlb_sets", "l3tlb_en"),

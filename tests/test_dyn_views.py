@@ -241,6 +241,37 @@ def test_restseg_migration_invariants():
     assert np.asarray(st.restseg4.valid).any()  # migrations landed
 
 
+# ------------------------------------------------------- revelator
+
+
+def test_revelator_speculation_invariants():
+    """End-to-end revelator run: speculative hits + mispredicts + demand
+    walks exactly cover the L2-TLB misses, mispredicts DO occur under a
+    lossy signature (the alias model), every speculative resolution pays
+    an overlapped verification walk, and enrollment only follows walks."""
+    import dataclasses as dc
+
+    from golden_trace import GOLDEN_CFG, golden_trace
+    from repro.core.mmu import simulate
+
+    cfg = dc.replace(GOLDEN_CFG, revelator=True, rev_sets=16, rev_ways=4,
+                     rev_sig_bits=10)
+    trace = {k: jnp.asarray(v) for k, v in golden_trace(n=2000).items()}
+    stats, _ = simulate(cfg, trace)
+    hits = int(stats.n_rev_hit)
+    mis = int(stats.n_rev_mispred)
+    assert hits > 0 and mis > 0
+    # speculation resolves without the demand walker: partition holds
+    assert hits + mis + int(stats.n_demand_ptw) == int(stats.n_l2tlb_miss)
+    # every speculative resolution was verified by a real (overlapped)
+    # walk; verification is never free
+    assert int(np.asarray(stats.hist_rev_verify).sum()) == hits + mis
+    assert float(stats.sum_rev_verify_cyc) > 0
+    # enrollment is PTW-CP-gated after demand walks only
+    assert int(stats.n_rev_enroll) <= int(stats.n_demand_ptw)
+    assert int(stats.n_rev_enroll) > 0
+
+
 # --------------------------------------------------- path-independent cache
 
 
@@ -299,11 +330,98 @@ def test_key_canonicalizes_non_json_overrides():
         == runner._key("radix", "bc", 10, 0, {"victima": True})
 
 
+def test_ptw_reduction_zero_baseline_is_zero():
+    """A baseline with no demand walks has nothing to reduce: the old
+    ``1 - new/max(base, 1)`` returned a large NEGATIVE number instead
+    of 0.0 whenever the comparison system did walk."""
+    import types
+
+    from repro.core import metrics
+
+    none = types.SimpleNamespace(n_demand_ptw=0)
+    some = types.SimpleNamespace(n_demand_ptw=500)
+    assert metrics.ptw_reduction(none, some) == 0.0
+    assert metrics.ptw_reduction(some, none) == 1.0
+    assert metrics.ptw_reduction(some, some) == 0.0
+    assert metrics.reduction(100, 25) == 0.75
+
+
 def test_sweep_rejects_unknown_systems_before_simulating():
     from repro.sim import sweep
 
     with pytest.raises(SystemExit, match="unknown system"):
         sweep.main(["radix", "definitely_not_a_system"])
+
+
+def test_sweep_parse_args_accepts_both_tag_forms():
+    from repro.sim import sweep
+
+    assert sweep.parse_args(["--tags", "native,ablation"]) \
+        == ([], ["native", "ablation"])
+    assert sweep.parse_args(["--tags=utopia"]) == ([], ["utopia"])
+    assert sweep.parse_args(["radix", "--tags", "virt", "pom"]) \
+        == (["radix", "pom"], ["virt"])
+
+
+def test_sweep_parse_args_rejects_flag_like_tag_values():
+    """``--tags --foo`` used to silently swallow the next option as a
+    tag list; flag-like values must error out instead."""
+    from repro.sim import sweep
+
+    with pytest.raises(SystemExit, match="needs a comma-separated value"):
+        sweep.parse_args(["--tags", "--foo"])
+    with pytest.raises(SystemExit, match="needs a comma-separated value"):
+        sweep.parse_args(["--tags=-foo"])
+    with pytest.raises(SystemExit, match="needs a comma-separated value"):
+        sweep.parse_args(["--tags"])  # missing value entirely
+
+
+def test_run_ladder_reuses_cached_member_cells(tmp_path, monkeypatch):
+    """A workload with SOME members cached used to re-simulate and
+    REWRITE every member's entry; cached cells must be returned as-is
+    (neither recomputed nor rewritten — mtime/bytes unchanged) and only
+    the missing cells stored."""
+    from repro.core.stages import zero_stats
+    from repro.sim import runner
+
+    monkeypatch.setattr(runner, "CACHE_DIR", str(tmp_path))
+    members, wls, n, seed = ("radix", "victima"), ["bc", "bfs"], 64, 7
+
+    # pre-seed ONE cell with sentinel content the stub cannot produce
+    sentinel = ({"marker": "seeded"}, {"extras": 1}, None)
+    seeded = runner._path("radix", "bc", n, seed, None)
+    runner._store(seeded, sentinel)
+    stat0 = os.stat(seeded)
+    with open(seeded, "rb") as f:
+        bytes0 = f.read()
+
+    calls = []
+
+    def fake_simulate_systems(cfg, dyns, traces, stage_names=None):
+        import jax
+        S = jax.tree.leaves(dyns)[0].shape[0]
+        W = jax.tree.leaves(traces)[0].shape[1]
+        calls.append((S, W))
+        per = [[zero_stats() for _ in range(W)] for _ in range(S)]
+        extras = [[{"stub": True} for _ in range(W)] for _ in range(S)]
+        return per, extras
+
+    monkeypatch.setattr(runner, "simulate_systems", fake_simulate_systems)
+    out = runner.run_ladder("radix", workloads=wls, n=n, seed=seed,
+                            members=members)
+
+    # the seeded cell came back from the cache, not the stub...
+    assert out["radix"]["bc"] == sentinel
+    # ...its bytes and mtime are untouched...
+    stat1 = os.stat(seeded)
+    with open(seeded, "rb") as f:
+        assert f.read() == bytes0
+    assert stat1.st_mtime_ns == stat0.st_mtime_ns
+    # ...and the three genuinely missing cells were simulated + stored
+    assert calls == [(len(members), len(wls))]
+    for s, w in [("victima", "bc"), ("radix", "bfs"), ("victima", "bfs")]:
+        assert out[s][w][1] == {"stub": True}, (s, w)
+        assert os.path.exists(runner._path(s, w, n, seed, None)), (s, w)
 
 
 def test_trace_gen_reports_total_page_count():

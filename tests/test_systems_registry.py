@@ -7,8 +7,8 @@
   bit-for-bit on a fixed seed (tests/golden/mmu_stats.json);
 - a batched (vmapped) ladder run is bit-identical to per-system runs —
   for the L2-TLB geometry Dyn fields, the L2-*cache* geometry view
-  (Fig. 25 family), the per-lane victima/restseg/l3_tlb/pom gates, and
-  the virtualized 2-D-walk family;
+  (Fig. 25 family), the per-lane rev/victima/restseg/l3_tlb/pom gates,
+  and the virtualized 2-D-walk family;
 - ladders are DISCOVERED from DYN_FIELDS-compatibility of registry
   entries (no hand-maintained member lists), and the discovered
   families' membership is pinned (a registry entry silently falling out
@@ -51,11 +51,14 @@ def _tiny_config(name):
     if cfg.utopia:
         cfg = dataclasses.replace(cfg, restseg4_sets=16, restseg2_sets=8,
                                   restseg_ways=min(cfg.restseg_ways, 8))
+    if cfg.revelator:
+        cfg = dataclasses.replace(cfg, rev_sets=16, rev_ways=4,
+                                  rev_sig_bits=10)
     return cfg
 
 
 def test_registry_compositions_are_canonical():
-    assert len(systems.REGISTRY) >= 34
+    assert len(systems.REGISTRY) >= 37
     for name, sys_ in systems.REGISTRY.items():
         assert sys_.stages == default_stages(sys_.config()), name
         assert sys_.stages[-1] in WALK_STAGES, name
@@ -201,18 +204,23 @@ def test_batched_dyn_l2_cache_matches_single_runs(tiny_trace):
 
 
 _TINY_RS = dict(restseg4_sets=16, restseg2_sets=8, restseg_ways=4)
+# tiny signature table: 16 sets x 4 ways with a 10-bit lossy signature,
+# so the 4096-page golden trace actually exercises alias mispredicts
+_TINY_REV = dict(rev_sets=16, rev_ways=4, rev_sig_bits=10)
 
 
 def test_batched_dyn_virt_matches_single_runs(tiny_trace):
-    """np, victima_virt, pom_virt and utopia_virt lanes share one
-    compiled 2-D-walk ladder: the nested-TLB-block, POM and RestSeg
-    machinery dyn-gates off bit-exactly."""
+    """np, victima_virt, pom_virt, utopia_virt and revelator_virt lanes
+    share one compiled 2-D-walk ladder: the nested-TLB-block, POM,
+    RestSeg and speculative-verification machinery dyn-gates off
+    bit-exactly."""
     vbase = dataclasses.replace(GOLDEN_CFG, virt=True, l3_sets=16,
-                                pom_sets=16, pom_ways=4, **_TINY_RS)
+                                pom_sets=16, pom_ways=4, **_TINY_RS,
+                                **_TINY_REV)
     _ladder_equivalence(
         vbase,
         [dict(victima=False), dict(victima=True, l2_sets=16, l2_ways=4),
-         dict(utopia=True), dict(pom=True)],
+         dict(utopia=True), dict(pom=True), dict(revelator=True)],
         tiny_trace)
 
 
@@ -230,6 +238,20 @@ def test_batched_dyn_utopia_matches_single_runs(tiny_trace):
         tiny_trace)
 
 
+def test_batched_dyn_revelator_matches_single_runs(tiny_trace):
+    """Revelator lanes riding the batched native family: the signature
+    probe, verification walk and enrollment machinery dyn-gate off
+    bit-exactly on non-revelator lanes, and a revelator lane matches
+    its static per-system run bit-for-bit."""
+    base_cfg = dataclasses.replace(GOLDEN_CFG, **_TINY_REV)
+    _ladder_equivalence(
+        base_cfg,
+        [dict(revelator=True),
+         dict(),  # plain radix lane: revelator machinery masked off
+         dict(revelator=True, victima=True)],
+        tiny_trace)
+
+
 def test_batched_dyn_l3_pom_gates_match_single_runs(tiny_trace):
     """The l3_tlb and pom stages dyn-gate per lane: L3/POM systems and a
     plain radix lane share one compiled step, bit-exactly."""
@@ -244,16 +266,18 @@ def test_batched_dyn_l3_pom_gates_match_single_runs(tiny_trace):
 
 def test_batched_all_gates_combined_matches_single_runs(tiny_trace):
     """The production shape: the discovered native family's base
-    composition carries ALL four gated stages (victima + restseg +
+    composition carries ALL five gated stages (rev + victima + restseg +
     l3_tlb + pom) at once, so one lane of each flavour must still be
     bit-identical to its static run under the combined fill_order
-    (l2_tlb -> victima -> restseg -> pom -> l3_tlb -> l1_tlb)."""
+    (l2_tlb -> victima -> restseg -> rev -> pom -> l3_tlb -> l1_tlb)."""
     base_cfg = dataclasses.replace(GOLDEN_CFG, l3tlb_ways=4,
-                                   pom_sets=16, pom_ways=4, **_TINY_RS)
+                                   pom_sets=16, pom_ways=4, **_TINY_RS,
+                                   **_TINY_REV)
     _ladder_equivalence(
         base_cfg,
         [dict(),  # plain radix: every gated stage masked off
          dict(utopia=True, victima=True),
+         dict(revelator=True),
          dict(pom=True),
          dict(l3tlb_sets=16)],
         tiny_trace)
@@ -269,14 +293,14 @@ def test_ladder_discovery_regression():
     native = set(ladders["radix"])
     assert native >= {
         "radix", "victima", "pom", "utopia", "utopia_victima",
-        "utopia_rs8", "utopia_rs32",
+        "utopia_rs8", "utopia_rs32", "revelator", "revelator_victima",
         "l3tlb_64k_15", "l3tlb_64k_24", "l3tlb_64k_39",
         "l2tlb_3k", "l2tlb_128k", "l2tlb_64k_real",
         "victima_l2_8m", "radix_l2_8m",
     }, native
-    assert len(native) == 26, sorted(native)
+    assert len(native) == 28, sorted(native)
     assert set(ladders["np"]) == {"np", "victima_virt", "pom_virt",
-                                  "utopia_virt"}
+                                  "utopia_virt", "revelator_virt"}
     # every registered system is either a ladder member or one of the
     # known singletons (configs differing beyond DYN_FIELDS)
     covered = {m for mem in ladders.values() for m in mem}
