@@ -12,6 +12,7 @@ import json
 import os
 import time
 
+import jax
 import numpy as np
 
 from repro.core import metrics, timing
@@ -23,6 +24,13 @@ from repro.sim.runner import run_batch, run_ladder
 _WLS_ENV = os.environ.get("REPRO_SIM_WLS", "")
 WLS = ([w for w in _WLS_ENV.split(",") if w] if _WLS_ENV
        else trace_gen.all_workloads())
+_BAD_WLS = sorted(set(WLS) - set(trace_gen.WORKLOADS))
+if _BAD_WLS:
+    # fail up front with the knob named — a typo used to surface as a
+    # bare KeyError from a trace-generation worker thread mid-sweep
+    raise SystemExit(
+        f"REPRO_SIM_WLS: unknown workload(s) {', '.join(_BAD_WLS)}; "
+        f"known: {', '.join(trace_gen.WORKLOADS)}")
 N = int(os.environ.get("REPRO_SIM_N", 150_000))
 
 # systems covered by a batched (vmapped) ladder run: the first _sys()
@@ -351,16 +359,21 @@ def fig29_virt_miss_latency():
 def write_sweep_artifact(path: str | None = None) -> str:
     """Dump the sweep-throughput trajectory to BENCH_sweep.json.
 
-    Records every batched ladder fill this process ran (compile +
-    simulate wall time, systems-per-compile) plus the registry's current
-    ladder shapes, so CI can diff sweep throughput across PRs — a
-    registry entry silently falling out of its batched family shows up
-    here as a shrunk systems-per-compile long before it costs minutes.
+    Records every batched ladder fill this process ran plus the
+    registry's current ladder shapes, so CI can diff sweep throughput
+    across PRs — a registry entry silently falling out of its batched
+    family shows up here as a shrunk systems-per-compile long before it
+    costs minutes.  Schema 2: each ``ladder_fills`` record splits the
+    pipeline stages (``trace_gen_wall_s`` = generation not hidden
+    behind simulation, ``compile_plus_sim_wall_s`` = the compiled
+    shard_map dispatches) and carries ``devices``/``mesh``/``chunk``
+    metadata; the host device count rides at top level too.
     """
     path = path or os.environ.get("REPRO_BENCH_SWEEP", "BENCH_sweep.json")
     artifact = {
-        "schema": 1,
+        "schema": 2,
         "sim_n": N,
+        "devices": jax.local_device_count(),
         "workloads": WLS,
         "ladders": {lad: {"n_systems": len(members), "members": members}
                     for lad, members in systems.LADDERS.items()},

@@ -21,6 +21,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+# a pure pytree/mesh utility with no repro.core (or sim-sibling) imports,
+# so this core module can use it without a layering cycle
+from repro.sim import parallel
 from repro.core.caches import BT_DATA, access_data
 from repro.core.stages import (Dyn, Feats, MMUState, Request, STAGES,
                                SimConfig, Stats, WALK_HIST_BUCKETS,
@@ -30,8 +33,8 @@ from repro.core.stages.fold import accum_stats, collect_feats
 
 __all__ = [
     "Dyn", "Feats", "MMUState", "SimConfig", "Stats", "WALK_HIST_BUCKETS",
-    "make_state", "make_step", "simulate", "simulate_batch",
-    "simulate_systems",
+    "make_state", "make_step", "make_systems_runner", "simulate",
+    "simulate_batch", "simulate_systems",
 ]
 
 
@@ -177,24 +180,22 @@ def simulate_batch(cfg: SimConfig, traces: dict, stage_names=None):
     return per, extras
 
 
-def simulate_systems(cfg: SimConfig, dyns: Dyn, traces: dict,
-                     stage_names=None):
-    """Run S shape-compatible systems x W workloads in ONE compiled call.
+def make_systems_runner(cfg: SimConfig, plan, stage_names=None):
+    """Build a REUSABLE sharded S x W dispatch for one mesh plan.
 
-    `cfg` is the ladder's static base config (structures allocated at the
-    ladder maximum); `dyns` has [S]-shaped leaves of per-system sizing
-    scalars; traces leaves are [T, W, ...] (shared across systems).
-    When more than one device is visible and S divides evenly, the system
-    axis is sharded across devices (`jax.pmap`); otherwise everything
-    vmaps on one device.  Returns (list[S] of list[W] Stats, extras).
+    Returns ``run(dyns, traces) -> (per, extras)``.  The shard_map +
+    jit wrapper is constructed once, so same-shape calls — e.g.
+    ``runner.run_ladder``'s fixed-width workload chunks — trace, lower
+    and compile exactly once instead of once per call.
     """
-    S = jax.tree.leaves(dyns)[0].shape[0]
-    W = jax.tree.leaves(traces)[0].shape[1]
 
     def run_systems(d, tr):
+        # derive the workload width from tr: under shard_map this body
+        # sees one [S_blk] x [W_blk] mesh block, not the full grid
+        w_blk = jax.tree.leaves(tr)[0].shape[1]
         base = make_state(cfg)
         st0 = jax.tree.map(
-            lambda x: jnp.broadcast_to(x, (W,) + x.shape), base)
+            lambda x: jnp.broadcast_to(x, (w_blk,) + x.shape), base)
 
         def one_system(dd):
             step = make_step(cfg, stage_names, dyn=dd)
@@ -206,22 +207,40 @@ def simulate_systems(cfg: SimConfig, dyns: Dyn, traces: dict,
 
         return jax.vmap(one_system)(d)
 
-    n_dev = jax.local_device_count()
-    if n_dev > 1 and S % n_dev == 0:
-        # device-sharded system axis: [S] -> [n_dev, S/n_dev], traces
-        # replicated; outputs fold back to a flat [S, W, ...] layout
-        sharded = jax.tree.map(
-            lambda x: x.reshape((n_dev, S // n_dev) + x.shape[1:]), dyns)
-        out = jax.pmap(run_systems, in_axes=(0, None))(sharded, traces)
-        out = jax.tree.map(
-            lambda x: x.reshape((S,) + x.shape[2:]), out)
-    else:
-        out = jax.jit(run_systems)(dyns, traces)
-    stats, l2a, l2m, hd, ht, feats, pc4 = out
-    stats = jax.tree.map(jax.device_get, stats)
-    per = [[jax.tree.map(lambda x, s=s, w=w: x[s, w], stats)
-            for w in range(W)] for s in range(S)]
-    extras = [[_extras_of(cfg, l2a, l2m, hd, ht, feats, pc4,
-                          index=lambda x, s=s, w=w: x[s, w])
-               for w in range(W)] for s in range(S)]
-    return per, extras
+    dispatch = parallel.shard_wrap(run_systems, plan)
+
+    def run(dyns: Dyn, traces: dict):
+        S = jax.tree.leaves(dyns)[0].shape[0]
+        W = jax.tree.leaves(traces)[0].shape[1]
+        stats, l2a, l2m, hd, ht, feats, pc4 = dispatch(dyns, traces)
+        stats = jax.tree.map(jax.device_get, stats)
+        per = [[jax.tree.map(lambda x, s=s, w=w: x[s, w], stats)
+                for w in range(W)] for s in range(S)]
+        extras = [[_extras_of(cfg, l2a, l2m, hd, ht, feats, pc4,
+                              index=lambda x, s=s, w=w: x[s, w])
+                   for w in range(W)] for s in range(S)]
+        return per, extras
+
+    return run
+
+
+def simulate_systems(cfg: SimConfig, dyns: Dyn, traces: dict,
+                     stage_names=None, plan=None):
+    """Run S shape-compatible systems x W workloads in ONE compiled call.
+
+    `cfg` is the ladder's static base config (structures allocated at the
+    ladder maximum); `dyns` has [S]-shaped leaves of per-system sizing
+    scalars; traces leaves are [T, W, ...] (shared across systems).
+    The S x W grid is dispatched over a 2-D ("sys", "wl") device mesh
+    via shard_map (repro.sim.parallel): the system axis is padded to a
+    mesh multiple (no divisibility precondition) and on a single device
+    the 1x1 mesh runs the identical code path as an identity
+    partitioning.  `plan` overrides the mesh factorization (see
+    ``parallel.plan_mesh``).  Returns (list[S] of list[W] Stats, extras).
+    One-shot form of ``make_systems_runner`` — callers dispatching the
+    same shapes repeatedly should hold on to a runner instead.
+    """
+    S = jax.tree.leaves(dyns)[0].shape[0]
+    W = jax.tree.leaves(traces)[0].shape[1]
+    plan = plan or parallel.plan_mesh(S, W)
+    return make_systems_runner(cfg, plan, stage_names)(dyns, traces)

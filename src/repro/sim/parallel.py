@@ -1,0 +1,178 @@
+"""Device-mesh planning + shard_map dispatch for batched ladder sweeps.
+
+A batched ladder run is an [S]-system x [W]-workload grid of mutually
+independent scans (``mmu.simulate_systems``).  This module spreads that
+grid over a 2-D ``("sys", "wl")`` device mesh:
+
+- ``plan_mesh`` factorizes the visible devices into mesh dims.  The
+  workload dim must divide W exactly (traces are big; we never pad
+  them here — ``runner.run_ladder`` fixes W via chunking instead); the
+  system dim may be anything, because ``shard_systems`` PADS the system
+  axis up to a mesh multiple — "S divides the device count evenly" is
+  NOT a precondition.
+- ``shard_systems`` places the inputs (``NamedSharding``: Dyn leaves
+  ``P("sys")``, trace leaves ``P(None, "wl")``), wraps the caller's
+  per-block function in ``shard_map`` and slices the padding back off.
+  On a 1x1 mesh the same code path degenerates to an identity
+  partitioning of a plain jitted call, so single-device hosts (CI)
+  exercise the exact production code.
+
+Every (s, w) lane's computation is independent and elementwise per
+lane, so the mesh factorization cannot change results: a sharded run is
+bit-identical to the unsharded one (pinned by tests/test_parallel.py
+and the multidev CI job).
+
+This module deliberately imports nothing from ``repro.core`` or its
+``repro.sim`` siblings — it is a pure pytree/mesh utility, so the core
+layer (``mmu.simulate_systems``) may import it without a cycle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+try:  # jax >= 0.6 promotes shard_map out of experimental
+    from jax import shard_map  # type: ignore[attr-defined]
+except ImportError:
+    from jax.experimental.shard_map import shard_map
+
+AXIS_SYS = "sys"
+AXIS_WL = "wl"
+
+__all__ = ["AXIS_SYS", "AXIS_WL", "MeshPlan", "plan_mesh", "build_mesh",
+           "shard_wrap", "shard_systems"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    """A (sys x wl) device-mesh factorization for an S x W sweep grid."""
+
+    sys_dim: int       # mesh extent along the system axis
+    wl_dim: int        # mesh extent along the workload axis (divides W)
+    n_systems: int     # unpadded S
+    n_workloads: int   # W
+    pad_systems: int   # S padded up to a sys_dim multiple
+
+    @property
+    def n_devices(self) -> int:
+        return self.sys_dim * self.wl_dim
+
+    def describe(self) -> str:
+        return f"{self.sys_dim}x{self.wl_dim}"
+
+
+def plan_mesh(n_systems: int, n_workloads: int, n_devices: int | None = None,
+              force: tuple[int, int] | None = None) -> MeshPlan:
+    """Factorize the device count into a ("sys", "wl") mesh.
+
+    Policy: the workload dim takes the largest divisor of W that also
+    divides the device count (traces shard without padding); the system
+    dim takes the remaining devices, capped at S (an 8-device host never
+    runs a 2-system ladder 4x redundantly).  The system axis is then
+    padded up to a ``sys_dim`` multiple — divisibility of S is never
+    required.  ``force=(sys, wl)`` overrides the factorization (the
+    ``--mesh`` debug flag); ``n_devices`` defaults to the visible device
+    count.  Empty grids are rejected up front: a sweep over zero systems
+    or zero workloads is always a caller bug, and letting it reach the
+    mesh reshape would produce an unrelated error.
+    """
+    if n_systems <= 0:
+        raise ValueError(
+            f"empty ladder: no systems to simulate (n_systems={n_systems})")
+    if n_workloads <= 0:
+        raise ValueError(
+            f"empty ladder: no workloads to simulate "
+            f"(n_workloads={n_workloads})")
+    if force is not None:
+        sys_dim, wl_dim = int(force[0]), int(force[1])
+        if sys_dim < 1 or wl_dim < 1:
+            raise ValueError(f"mesh dims must be >= 1, got {force}")
+        if n_workloads % wl_dim != 0:
+            raise ValueError(
+                f"mesh wl dim {wl_dim} does not divide the workload axis "
+                f"({n_workloads}); traces are never padded — pick a "
+                f"divisor (the system axis is the padded one)")
+    else:
+        d = n_devices if n_devices is not None else jax.local_device_count()
+        wl_dim = max(k for k in range(1, min(d, n_workloads) + 1)
+                     if n_workloads % k == 0 and d % k == 0)
+        sys_dim = min(d // wl_dim, n_systems)
+    pad = math.ceil(n_systems / sys_dim) * sys_dim
+    return MeshPlan(sys_dim=sys_dim, wl_dim=wl_dim, n_systems=n_systems,
+                    n_workloads=n_workloads, pad_systems=pad)
+
+
+def build_mesh(plan: MeshPlan) -> Mesh:
+    """Materialize the plan over the first ``plan.n_devices`` devices."""
+    devs = jax.devices()
+    if len(devs) < plan.n_devices:
+        raise ValueError(
+            f"mesh {plan.describe()} needs {plan.n_devices} devices but "
+            f"only {len(devs)} are visible")
+    grid = np.asarray(devs[: plan.n_devices]).reshape(
+        plan.sys_dim, plan.wl_dim)
+    return Mesh(grid, (AXIS_SYS, AXIS_WL))
+
+
+def _pad_sys(x: jax.Array, pad: int) -> jax.Array:
+    # replicate the last lane: a valid config, so padded lanes simulate
+    # harmlessly (their outputs are sliced off, never stored)
+    return jnp.concatenate(
+        [x, jnp.broadcast_to(x[-1:], (pad,) + x.shape[1:])])
+
+
+def shard_wrap(fn, plan: MeshPlan):
+    """Wrap ``fn`` for the mesh ONCE; returns ``call(dyns, traces)``.
+
+    ``fn`` is a per-block function: Dyn leaves arrive ``[S_blk]``-shaped
+    and trace leaves ``[T, W_blk, ...]``; every output leaf must lead
+    with ``[S_blk, W_blk]``.  The system axis is padded to the mesh (see
+    ``plan_mesh``) and sliced back before returning, so callers always
+    see exactly [S, W] outputs.  ``check_rep=False`` where the jax
+    version still takes it: the body carries no collectives, so there
+    are no replication claims to verify.
+
+    The shard_map + jit wrapper is built here, outside the returned
+    closure: same-shape calls (``run_ladder``'s fixed-width chunks) hit
+    one jit cache entry and trace/lower exactly once.
+    """
+    mesh = build_mesh(plan)
+    specs = dict(in_specs=(P(AXIS_SYS), P(None, AXIS_WL)),
+                 out_specs=P(AXIS_SYS, AXIS_WL))
+    try:
+        sharded = shard_map(fn, mesh=mesh, check_rep=False, **specs)
+    except TypeError:  # newer jax dropped/renamed check_rep
+        sharded = shard_map(fn, mesh=mesh, **specs)
+    jitted = jax.jit(sharded)
+
+    def call(dyns, traces):
+        S = jax.tree.leaves(dyns)[0].shape[0]
+        W = jax.tree.leaves(traces)[0].shape[1]
+        if (plan.n_systems, plan.n_workloads) != (S, W):
+            raise ValueError(
+                f"mesh plan is for a {plan.n_systems}x{plan.n_workloads} "
+                f"grid but the inputs are {S}x{W}")
+        pad = plan.pad_systems - S
+        if pad:
+            dyns = jax.tree.map(lambda x: _pad_sys(x, pad), dyns)
+        dyns = jax.device_put(dyns, NamedSharding(mesh, P(AXIS_SYS)))
+        traces = jax.device_put(traces,
+                                NamedSharding(mesh, P(None, AXIS_WL)))
+        out = jitted(dyns, traces)
+        if pad:
+            out = jax.tree.map(lambda x: x[:S], out)
+        return out
+
+    return call
+
+
+def shard_systems(fn, dyns, traces, plan: MeshPlan | None = None):
+    """One-shot form of ``shard_wrap``: plan (if needed), wrap, call."""
+    S = jax.tree.leaves(dyns)[0].shape[0]
+    W = jax.tree.leaves(traces)[0].shape[1]
+    return shard_wrap(fn, plan or plan_mesh(S, W))(dyns, traces)

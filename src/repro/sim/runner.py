@@ -4,8 +4,11 @@ Systems are declared in ``repro.sim.systems``; this module turns
 (system, workload) pairs into disk-cached Stats.  Cache writes are
 crash-safe (temp file + atomic rename) and unreadable entries are
 treated as missing, so an interrupted sweep can never poison later
-runs.  ``run_ladder`` fills a whole shape-compatible system ladder with
-ONE compiled, vmapped simulate call.
+runs.  ``run_ladder`` fills a whole shape-compatible system ladder
+through one compiled shard_map kernel, as a producer/consumer pipeline:
+trace generation runs on a background thread pool and overlaps with the
+device-meshed simulate calls, which dispatch in fixed-width workload
+chunks so every chunk reuses the SAME compiled shape.
 """
 from __future__ import annotations
 
@@ -16,6 +19,7 @@ import os
 import pickle
 import tempfile
 import time
+from concurrent.futures import ThreadPoolExecutor
 
 import jax
 
@@ -28,13 +32,25 @@ jax.config.update("jax_persistent_cache_min_compile_time_secs", 5)
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.mmu import simulate, simulate_batch, simulate_systems
-from repro.sim import systems, trace_gen
+from repro.core.mmu import make_systems_runner, simulate, simulate_batch
+from repro.sim import parallel, systems, trace_gen
 
 CACHE_DIR = os.environ.get("REPRO_SIM_CACHE", "/root/repo/.sim_cache")
 
+# ladder dispatch width: workloads per compiled simulate call.  The last
+# chunk pads by repeating its final workload, so EVERY run_ladder call —
+# whatever its missing-workload count — compiles exactly one [S, CHUNK]
+# shape (the old whole-missing-set dispatch recompiled for each distinct
+# count), and trace generation overlaps with the previous chunk's sim.
+CHUNK = int(os.environ.get("REPRO_SIM_CHUNK", 4))
+
+# background trace-generation threads for the run_ladder producer pool
+GEN_WORKERS = int(os.environ.get("REPRO_GEN_WORKERS", 4))
+
 # perf-trajectory records: one entry per batched ladder fill this process
-# ran (compile + simulate wall time, systems-per-compile).  benchmarks/
+# ran, with the pipeline stages split out (trace_gen_wall_s = generation
+# time NOT hidden behind simulation; compile_plus_sim_wall_s = the
+# compiled shard_map calls) plus devices/mesh metadata.  benchmarks/
 # paper.write_sweep_artifact dumps them to BENCH_sweep.json so CI can
 # track sweep-throughput regressions across PRs.
 LADDER_PERF: list[dict] = []
@@ -138,6 +154,16 @@ def _np_stats(st):
 
 
 def _stack_traces(gens, n: int) -> dict:
+    keys = set(gens[0]["trace"])
+    for g in gens:
+        if set(g["trace"]) != keys:
+            # a mismatched generator used to surface as a bare KeyError
+            # deep in the stacking comprehension — name the workload
+            raise ValueError(
+                f"workload {g['spec'].name!r} emits trace keys "
+                f"{sorted(g['trace'])} but {gens[0]['spec'].name!r} "
+                f"emits {sorted(keys)}; every generator in a batched "
+                f"run must produce the same trace fields")
     stacked = {
         k: jnp.asarray(np.stack([g["trace"][k] for g in gens], axis=1))
         for k in gens[0]["trace"]
@@ -166,7 +192,7 @@ def run_batch(system: str, workloads=None, n: int = 150_000, seed: int = 0,
         else:
             out[w] = got
     if missing:
-        gens = [trace_gen.generate(w, n=n, seed=seed) for w in missing]
+        gens = trace_gen.generate_many(missing, n=n, seed=seed)
         cfg = _sim_config(system, overrides)
         # overrides may change the composition (e.g. victima=True on
         # radix): let make_step re-derive the stages from the final cfg
@@ -181,16 +207,26 @@ def run_batch(system: str, workloads=None, n: int = 150_000, seed: int = 0,
 
 
 def run_ladder(ladder: str, workloads=None, n: int = 150_000,
-               seed: int = 0, cache: bool = True, members=None):
-    """Fill the cache for a whole system ladder in ONE compiled call.
+               seed: int = 0, cache: bool = True, members=None,
+               chunk: int | None = None, mesh=None):
+    """Fill the cache for a whole system ladder through ONE compiled
+    kernel, pipelined over a ("sys", "wl") device mesh.
 
-    All ladder members (e.g. the 18-system radix/victima family incl.
-    the Fig. 25 L2-cache sizes, or the L3-TLB latency trio) are vmapped
-    over their Dyn sizing scalars and over the workload axis, so the
-    sweep pays a single compilation instead of one per system.
-    `members` restricts the run to a subset of the ladder.  Returns dict
-    system -> dict workload -> result, byte-compatible with per-system
-    ``run_batch`` results.
+    All ladder members (e.g. the 28-system native family incl. the
+    Fig. 25 L2-cache sizes, or the virt family) are vmapped over their
+    Dyn sizing scalars; the system axis is padded to the mesh (see
+    ``parallel.plan_mesh``), so any member count works on any device
+    count.  The run is a producer/consumer pipeline: trace generation
+    for missing workloads runs on a background thread pool while the
+    compiled simulate call chews on the previous chunk — ``chunk``
+    workloads per dispatch (default ``CHUNK``), the last chunk padded by
+    repeating its final workload so every dispatch shares one compiled
+    [S, chunk] shape.  Chunking and meshing cannot change results:
+    every (system, workload) lane computes independently, so cache
+    entries stay byte-compatible with per-system ``run_batch`` results
+    (pinned by the multidev tests).  `members` restricts the run to a
+    subset of the ladder; `mesh=(sys, wl)` forces the mesh factorization
+    (debug).  Returns dict system -> dict workload -> result.
     """
     members = tuple(members or systems.LADDERS[ladder])
     workloads = workloads or trace_gen.all_workloads()
@@ -208,26 +244,58 @@ def run_ladder(ladder: str, workloads=None, n: int = 150_000,
                 out[s][w] = r
         if any(r is None for r in got.values()):
             missing.append(w)
-    if missing:
-        gens = [trace_gen.generate(w, n=n, seed=seed) for w in missing]
-        cfg = systems.ladder_base_config(ladder, members)
-        dyns = systems.ladder_dyn(members)
-        # the base composition may contain dyn-gated stages some members
-        # lack (radix lanes riding a victima ladder): derive from cfg
-        t0 = time.time()
-        per, extras = simulate_systems(cfg, dyns, _stack_traces(gens, n))
-        LADDER_PERF.append({
-            "ladder": ladder, "n_systems": len(members),
-            "n_workloads": len(missing), "sim_n": n,
-            "compile_plus_sim_wall_s": round(time.time() - t0, 3),
-        })
-        for si, s in enumerate(members):
-            for wi, (w, g) in enumerate(zip(missing, gens)):
-                if w in out[s]:
-                    continue  # pre-existing cell: keep the cached bytes
-                result = (_np_stats(per[si][wi]), extras[si][wi], g["spec"])
-                _store(_path(s, w, n, seed, None), result)
-                out[s][w] = result
+    if not missing:
+        return out
+    cfg = systems.ladder_base_config(ladder, members)
+    dyns = systems.ladder_dyn(members)
+    # never shrink the dispatch width to the missing count: a
+    # partially-cached rerun must reuse the SAME compiled [S, chunk]
+    # shape (short groups pad below), and a forced mesh planned for
+    # `chunk` must stay valid however few workloads are left
+    chunk = chunk or CHUNK
+    plan = parallel.plan_mesh(len(members), chunk,
+                              force=tuple(mesh) if mesh else None)
+    # ONE runner for all chunks: every chunk dispatches the same
+    # [S, chunk] shape, so the shard_map kernel traces/compiles once
+    run_fn = make_systems_runner(cfg, plan)
+    t_gen = t_sim = 0.0
+    n_chunks = 0
+    with ThreadPoolExecutor(
+            max_workers=min(len(missing), GEN_WORKERS)) as pool:
+        futs = {w: pool.submit(trace_gen.generate, w, n=n, seed=seed)
+                for w in missing}
+        for lo in range(0, len(missing), chunk):
+            group = missing[lo:lo + chunk]
+            t0 = time.time()
+            gens = [futs[w].result() for w in group]
+            t_gen += time.time() - t0  # generation NOT hidden behind sim
+            # pad the workload axis to the fixed chunk width: padded
+            # lanes re-simulate the last workload and are never stored
+            padded = gens + [gens[-1]] * (chunk - len(gens))
+            t0 = time.time()
+            # the base composition may contain dyn-gated stages some
+            # members lack (radix lanes riding a victima ladder):
+            # the runner derives the stages from cfg
+            per, extras = run_fn(dyns, _stack_traces(padded, n))
+            t_sim += time.time() - t0
+            n_chunks += 1
+            for si, s in enumerate(members):
+                for wi, (w, g) in enumerate(zip(group, gens)):
+                    if w in out[s]:
+                        continue  # pre-existing cell: keep cached bytes
+                    result = (_np_stats(per[si][wi]), extras[si][wi],
+                              g["spec"])
+                    _store(_path(s, w, n, seed, None), result)
+                    out[s][w] = result
+    LADDER_PERF.append({
+        "ladder": ladder, "n_systems": len(members),
+        "n_workloads": len(missing), "sim_n": n,
+        "devices": jax.local_device_count(),
+        "mesh": [plan.sys_dim, plan.wl_dim],
+        "chunk": chunk, "n_chunks": n_chunks,
+        "trace_gen_wall_s": round(t_gen, 3),
+        "compile_plus_sim_wall_s": round(t_sim, 3),
+    })
     return out
 
 

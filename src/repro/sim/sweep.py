@@ -15,6 +15,13 @@ select registry subsets by tag without listing names, e.g.
 
     python -m repro.sim.sweep --tags utopia
     python -m repro.sim.sweep radix --tags sensitivity
+
+Mesh debugging: ``--devices N`` forces N virtual host devices (sets
+``--xla_force_host_platform_device_count`` before the first device
+query) and ``--mesh SxW`` pins the ladder ("sys", "wl") mesh
+factorization, e.g.
+
+    python -m repro.sim.sweep --devices 4 --mesh 2x2 --tags headline
 """
 from __future__ import annotations
 
@@ -70,37 +77,71 @@ SYSTEMS = [
 
 
 def parse_args(args):
-    """Split a CLI arg list into (system names, tags).
+    """Split a CLI arg list into (system names, tags, opts).
 
     ``--tags native,ablation`` (or ``--tags=...``) selects every system
     carrying any of the given registry tags; positional names add
-    individual systems on top.
+    individual systems on top.  ``opts`` carries the mesh debug flags:
+    ``--mesh SxW`` (forced ("sys", "wl") factorization) and
+    ``--devices N`` (forced virtual host device count).
     """
-    def _tag_list(val, flag):
-        # "--tags --foo" used to swallow the next OPTION as a tag list;
+    def _value(val, flag, what="a comma-separated value"):
+        # "--tags --foo" used to swallow the next OPTION as a value;
         # flag-like values are always a CLI mistake, so error out
         if val is None or val.startswith("-"):
             raise SystemExit(
-                f"{flag} needs a comma-separated value"
+                f"{flag} needs {what}"
                 + (f", got {val!r}" if val is not None else ""))
-        return [t for t in val.split(",") if t]
+        return val
+
+    def _mesh(val, flag):
+        parts = _value(val, flag, "a SYSxWL value").split("x")
+        if len(parts) != 2 or not all(p.isdigit() for p in parts):
+            raise SystemExit(f"{flag} wants SYSxWL (e.g. 2x2), got {val!r}")
+        return int(parts[0]), int(parts[1])
+
+    def _devices(val, flag):
+        if not _value(val, flag, "a device count").isdigit() or int(val) < 1:
+            raise SystemExit(f"{flag} wants a positive integer, got {val!r}")
+        return int(val)
 
     names, tags = [], []
+    opts = {"mesh": None, "devices": None}
     it = iter(args or [])
     for a in it:
         if a == "--tags":
-            tags += _tag_list(next(it, None), "--tags")
+            tags += [t for t in _value(next(it, None), "--tags").split(",")
+                     if t]
         elif a.startswith("--tags="):
-            tags += _tag_list(a.split("=", 1)[1], "--tags=")
+            tags += [t for t in _value(a.split("=", 1)[1], "--tags=")
+                     .split(",") if t]
+        elif a == "--mesh":
+            opts["mesh"] = _mesh(next(it, None), "--mesh")
+        elif a.startswith("--mesh="):
+            opts["mesh"] = _mesh(a.split("=", 1)[1], "--mesh=")
+        elif a == "--devices":
+            opts["devices"] = _devices(next(it, None), "--devices")
+        elif a.startswith("--devices="):
+            opts["devices"] = _devices(a.split("=", 1)[1], "--devices=")
         elif a.startswith("-"):
-            raise SystemExit(f"unknown option {a!r} (only --tags)")
+            raise SystemExit(
+                f"unknown option {a!r} (only --tags/--mesh/--devices)")
         else:
             names.append(a)
-    return names, tags
+    return names, tags, opts
 
 
 def main(selected=None):
-    selected, tags = parse_args(selected)
+    selected, tags, opts = parse_args(selected)
+    if opts["devices"]:
+        # mesh debugging: force N virtual CPU devices.  This only works
+        # BEFORE the first jax device query initializes the backend —
+        # importing repro.sim.* touches no devices, so setting it here
+        # (not in runner) is early enough.
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={opts['devices']}"
+        ).strip()
     # validate CLI names/tags BEFORE any simulation: a typo used to burn
     # the full ladder compile and then die with a KeyError mid-sweep
     unknown = sorted(set(selected) - set(systems.REGISTRY))
@@ -126,7 +167,7 @@ def main(selected=None):
         if not todo:
             continue
         t0 = time.time()
-        run_ladder(ladder, n=N, members=todo)
+        run_ladder(ladder, n=N, members=todo, mesh=opts["mesh"])
         done.update(todo)
         print(f"[sweep] ladder:{ladder:>11s} x all  {time.time()-t0:7.1f}s "
               f"({len(todo)} systems, 1 compile; "

@@ -12,7 +12,9 @@ PTE lines carry 8-page spatial clusters — the structure Victima exploits.
 from __future__ import annotations
 
 import dataclasses
+import os
 import zlib
+from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
@@ -100,6 +102,13 @@ def generate(name: str, n: int = 400_000, seed: int = 0) -> dict:
              "n_pages": int (TOTAL 4K-page-equivalents, including the
              2M-backed region), "n_pages_2m_region": int} with numpy
     arrays (callers jnp-ify).
+
+    Thread-safe and seed-stable: every call builds its OWN
+    ``np.random.Generator`` from (seed, name) and touches no module
+    state, so concurrent generation (``generate_many``, the
+    ``runner.run_ladder`` producer pool) is bit-identical to sequential
+    calls regardless of scheduling — the property the seed-keyed sim
+    cache relies on.
     """
     spec = WORKLOADS[name]
     # stable per-workload salt: str.hash() is process-salted, which made
@@ -173,6 +182,23 @@ def generate(name: str, n: int = 400_000, seed: int = 0) -> dict:
         "n_pages": n_pages,
         "n_pages_2m_region": n2_pages4 // 512,
     }
+
+
+def generate_many(names, n: int = 400_000, seed: int = 0,
+                  workers: int | None = None) -> list[dict]:
+    """Generate traces for ``names`` on a thread pool, in input order.
+
+    numpy releases the GIL inside its kernels, so generation genuinely
+    overlaps on multi-core hosts; results are bit-identical to serial
+    ``generate`` calls (see its thread-safety note — pinned by
+    tests/test_parallel.py for seeds 0/1/7 across every workload).
+    """
+    names = list(names)
+    if not names:
+        return []
+    workers = workers or min(len(names), os.cpu_count() or 1, 8)
+    with ThreadPoolExecutor(max_workers=workers) as pool:
+        return list(pool.map(lambda w: generate(w, n=n, seed=seed), names))
 
 
 def all_workloads() -> list[str]:

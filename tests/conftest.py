@@ -16,4 +16,10 @@ def pytest_configure(config):
         "markers",
         "slow: long-running tests (multi-device lowering subprocesses); "
         "deselect with -m 'not slow'")
+    config.addinivalue_line(
+        "markers",
+        "multidev: tests that need a sharded ('sys', 'wl') device mesh; "
+        "they self-skip below 4 devices — run them under "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=4 (the "
+        "multidev CI job does)")
 

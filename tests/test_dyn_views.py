@@ -353,14 +353,32 @@ def test_sweep_rejects_unknown_systems_before_simulating():
         sweep.main(["radix", "definitely_not_a_system"])
 
 
+_NO_OPTS = {"mesh": None, "devices": None}
+
+
 def test_sweep_parse_args_accepts_both_tag_forms():
     from repro.sim import sweep
 
     assert sweep.parse_args(["--tags", "native,ablation"]) \
-        == ([], ["native", "ablation"])
-    assert sweep.parse_args(["--tags=utopia"]) == ([], ["utopia"])
+        == ([], ["native", "ablation"], _NO_OPTS)
+    assert sweep.parse_args(["--tags=utopia"]) == ([], ["utopia"], _NO_OPTS)
     assert sweep.parse_args(["radix", "--tags", "virt", "pom"]) \
-        == (["radix", "pom"], ["virt"])
+        == (["radix", "pom"], ["virt"], _NO_OPTS)
+
+
+def test_sweep_parse_args_mesh_and_devices():
+    from repro.sim import sweep
+
+    assert sweep.parse_args(["--mesh", "2x2", "--devices", "4"]) \
+        == ([], [], {"mesh": (2, 2), "devices": 4})
+    assert sweep.parse_args(["--mesh=4x1", "radix"]) \
+        == (["radix"], [], {"mesh": (4, 1), "devices": None})
+    with pytest.raises(SystemExit, match="SYSxWL"):
+        sweep.parse_args(["--mesh", "4"])
+    with pytest.raises(SystemExit, match="positive integer"):
+        sweep.parse_args(["--devices", "zero"])
+    with pytest.raises(SystemExit, match="needs a SYSxWL value"):
+        sweep.parse_args(["--mesh", "--tags"])
 
 
 def test_sweep_parse_args_rejects_flag_like_tag_values():
@@ -397,16 +415,19 @@ def test_run_ladder_reuses_cached_member_cells(tmp_path, monkeypatch):
 
     calls = []
 
-    def fake_simulate_systems(cfg, dyns, traces, stage_names=None):
-        import jax
-        S = jax.tree.leaves(dyns)[0].shape[0]
-        W = jax.tree.leaves(traces)[0].shape[1]
-        calls.append((S, W))
-        per = [[zero_stats() for _ in range(W)] for _ in range(S)]
-        extras = [[{"stub": True} for _ in range(W)] for _ in range(S)]
-        return per, extras
+    def fake_make_systems_runner(cfg, plan, stage_names=None):
+        def fake_run(dyns, traces):
+            import jax
+            S = jax.tree.leaves(dyns)[0].shape[0]
+            W = jax.tree.leaves(traces)[0].shape[1]
+            calls.append((S, W))
+            per = [[zero_stats() for _ in range(W)] for _ in range(S)]
+            extras = [[{"stub": True} for _ in range(W)] for _ in range(S)]
+            return per, extras
+        return fake_run
 
-    monkeypatch.setattr(runner, "simulate_systems", fake_simulate_systems)
+    monkeypatch.setattr(runner, "make_systems_runner",
+                        fake_make_systems_runner)
     out = runner.run_ladder("radix", workloads=wls, n=n, seed=seed,
                             members=members)
 
@@ -418,7 +439,8 @@ def test_run_ladder_reuses_cached_member_cells(tmp_path, monkeypatch):
         assert f.read() == bytes0
     assert stat1.st_mtime_ns == stat0.st_mtime_ns
     # ...and the three genuinely missing cells were simulated + stored
-    assert calls == [(len(members), len(wls))]
+    # in ONE dispatch, padded to the fixed chunk width (runner.CHUNK)
+    assert calls == [(len(members), runner.CHUNK)]
     for s, w in [("victima", "bc"), ("radix", "bfs"), ("victima", "bfs")]:
         assert out[s][w][1] == {"stub": True}, (s, w)
         assert os.path.exists(runner._path(s, w, n, seed, None)), (s, w)

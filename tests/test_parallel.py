@@ -1,0 +1,369 @@
+"""shard_map sweep engine: mesh planning + multi-device equivalence.
+
+- ``parallel.plan_mesh`` unit tests: system-axis padding (28 members
+  onto 4/6/8 fake devices), workload-axis factorization, the 1x1
+  single-device fallback, rejection of empty ladders and bad forced
+  meshes;
+- bit-identity of the shard_map dispatch vs a forced 1x1 mesh (= plain
+  jit(vmap)) vs per-system static ``simulate`` runs on a small
+  4-system x 2-workload family — on a multi-device host (the
+  ``multidev`` CI job forces 4 via XLA_FLAGS) the auto plan is a real
+  mesh, so the comparison pins sharded == unsharded;
+- overlapped trace generation (``trace_gen.generate_many``) equals
+  serial ``generate`` for every registered workload and seed 0/1/7 —
+  seed-stability is what keeps the sim cache valid;
+- golden cache-key digests for ``runner._key`` so a ``_canon``/dispatch
+  refactor can never silently re-key (and orphan) .sim_cache entries;
+- ``runner._stack_traces`` names the mismatched workload instead of
+  dying with a KeyError;
+- [multidev] ``run_ladder`` on a 4-device mesh writes cache entries
+  byte-identical to the forced single-device (1x1 mesh) run.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from golden_trace import GOLDEN_CFG, golden_trace
+from repro.core.caches import Lat
+from repro.core.mmu import SimConfig, simulate, simulate_systems
+from repro.core.stages import default_stages, dyn_of
+from repro.sim import parallel
+
+multidev = pytest.mark.multidev
+
+
+# ------------------------------------------------------------ mesh planning
+
+
+def test_plan_mesh_pads_system_axis():
+    """A 28-member ladder (the native family) lands on 4/6/8 devices by
+    PADDING the system axis to a mesh multiple — "S divides evenly" is
+    no longer a precondition (the old pmap path silently fell back to
+    one device whenever it wasn't)."""
+    for d, pad in [(4, 28), (6, 30), (8, 32)]:
+        plan = parallel.plan_mesh(28, 11, n_devices=d)
+        # 11 workloads are prime and coprime to d, so the wl dim is 1
+        assert (plan.sys_dim, plan.wl_dim) == (d, 1), d
+        assert plan.pad_systems == pad, d
+        assert plan.pad_systems % plan.sys_dim == 0
+        assert plan.pad_systems >= plan.n_systems
+
+
+def test_plan_mesh_shards_workloads_when_divisible():
+    plan = parallel.plan_mesh(4, 2, n_devices=4)
+    assert (plan.sys_dim, plan.wl_dim) == (2, 2)
+    assert plan.pad_systems == 4
+    plan = parallel.plan_mesh(5, 4, n_devices=8)
+    assert (plan.sys_dim, plan.wl_dim) == (2, 4)
+    assert plan.pad_systems == 6
+
+
+def test_plan_mesh_single_device_is_identity():
+    plan = parallel.plan_mesh(28, 11, n_devices=1)
+    assert (plan.sys_dim, plan.wl_dim) == (1, 1)
+    assert plan.pad_systems == 28  # never pads on a 1x1 mesh
+    assert plan.n_devices == 1
+
+
+def test_plan_mesh_never_outgrows_the_system_axis():
+    """An 8-device host must not run a 2-system ladder 4x redundantly:
+    the sys dim caps at S (leftover devices simply idle)."""
+    plan = parallel.plan_mesh(2, 1, n_devices=8)
+    assert plan.sys_dim == 2 and plan.pad_systems == 2
+
+
+def test_plan_mesh_rejects_empty_ladders():
+    with pytest.raises(ValueError, match="empty ladder"):
+        parallel.plan_mesh(0, 11)
+    with pytest.raises(ValueError, match="empty ladder"):
+        parallel.plan_mesh(4, 0)
+
+
+def test_plan_mesh_forced_mesh_validates():
+    plan = parallel.plan_mesh(5, 4, n_devices=8, force=(3, 2))
+    assert (plan.sys_dim, plan.wl_dim) == (3, 2)
+    assert plan.pad_systems == 6
+    # the wl dim must divide W exactly (traces are never padded here)
+    with pytest.raises(ValueError, match="does not divide"):
+        parallel.plan_mesh(4, 3, force=(2, 2))
+    with pytest.raises(ValueError, match=">= 1"):
+        parallel.plan_mesh(4, 4, force=(0, 2))
+
+
+def test_build_mesh_rejects_oversized_plans():
+    plan = parallel.plan_mesh(28, 11,
+                              n_devices=jax.local_device_count() * 2,
+                              force=(jax.local_device_count() * 2, 1))
+    with pytest.raises(ValueError, match="devices"):
+        parallel.build_mesh(plan)
+
+
+# ------------------------------------------- shard_map == jit(vmap) == static
+
+
+_VARIANTS = [
+    dict(l2tlb_sets=8, l2tlb_ways=4),
+    dict(l2tlb_sets=16, l2tlb_ways=4, victima=True),
+    dict(l2tlb_sets=16, l2tlb_ways=8, l2tlb_lat=17),
+    dict(l2tlb_sets=8, l2tlb_ways=8, victima=True, l2_sets=32, l2_ways=4),
+]
+
+
+@pytest.fixture(scope="module")
+def family_traces():
+    tr_a = {k: jnp.asarray(v) for k, v in golden_trace(n=1500).items()}
+    tr_b = {k: jnp.asarray(v)
+            for k, v in golden_trace(n=1500, seed=777).items()}
+    stacked = {k: jnp.stack([tr_a[k], tr_b[k]], axis=1) for k in tr_a}
+    return stacked, (tr_a, tr_b)
+
+
+def _family(variants):
+    from repro.sim.systems import dyn_base_config
+
+    cfgs = [dataclasses.replace(GOLDEN_CFG, **v) for v in variants]
+    dyns = jax.tree.map(lambda *xs: jnp.stack(xs),
+                        *[dyn_of(c) for c in cfgs])
+    return dyn_base_config(cfgs), cfgs, dyns
+
+
+def _assert_same_stats(ref, got, ctx):
+    for field, a, b in zip(ref._fields, ref, got):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), (ctx, field)
+
+
+def test_shard_map_matches_jit_vmap_and_static(family_traces):
+    """The sharded dispatch is bit-identical to a forced 1x1 mesh (plain
+    jit(vmap) semantics) AND to per-system static simulate runs, on a
+    4-system x 2-workload family.  Under the multidev CI job the auto
+    plan is a real 2x2 mesh, so this pins sharded == unsharded."""
+    traces, (tr_a, tr_b) = family_traces
+    base, cfgs, dyns = _family(_VARIANTS)
+    per, extras = simulate_systems(base, dyns, traces)
+    one = parallel.plan_mesh(len(cfgs), 2, n_devices=1)
+    per1, _ = simulate_systems(base, dyns, traces, plan=one)
+    for si, c in enumerate(cfgs):
+        for wi, tr in enumerate((tr_a, tr_b)):
+            ref, _ = simulate(c, tr)
+            _assert_same_stats(ref, per[si][wi], ("shard", si, wi))
+            _assert_same_stats(ref, per1[si][wi], ("1x1", si, wi))
+    assert np.all(np.isfinite(np.asarray(
+        [extras[si][wi]["l2_access"] for si in range(len(cfgs))
+         for wi in range(2)])))
+
+
+def test_shard_map_pads_odd_system_axis(family_traces):
+    """3 systems (odd, prime) through the mesh: on a multi-device host
+    the system axis pads up to the mesh and the padding lanes are
+    sliced off — results still match static runs bit-for-bit."""
+    traces, (tr_a, _) = family_traces
+    base, cfgs, dyns = _family(_VARIANTS[:3])
+    per, _ = simulate_systems(base, dyns, traces)
+    for si, c in enumerate(cfgs):
+        ref, _ = simulate(c, tr_a)
+        _assert_same_stats(ref, per[si][0], ("pad", si))
+
+
+# ------------------------------------------------ overlapped trace generation
+
+
+@pytest.mark.parametrize("seed", [0, 1, 7])
+def test_generate_many_matches_serial(seed):
+    """The thread-pool generation path must be bit-identical to serial
+    ``generate`` for every registered workload — seed-stability is what
+    keeps the seed-keyed sim cache valid."""
+    from repro.sim import trace_gen
+
+    names = trace_gen.all_workloads()
+    par = trace_gen.generate_many(names, n=4000, seed=seed, workers=4)
+    assert [g["spec"].name for g in par] == names  # input order kept
+    for name, g in zip(names, par):
+        ref = trace_gen.generate(name, n=4000, seed=seed)
+        assert g["spec"] == ref["spec"]
+        assert g["n_pages"] == ref["n_pages"]
+        assert g["n_pages_2m_region"] == ref["n_pages_2m_region"]
+        for k in ref["trace"]:
+            assert np.array_equal(g["trace"][k], ref["trace"][k]), (name, k)
+
+
+def test_generate_many_empty_and_default_workers():
+    from repro.sim import trace_gen
+
+    assert trace_gen.generate_many([]) == []
+    got = trace_gen.generate_many(["bc"], n=256, seed=0)
+    ref = trace_gen.generate("bc", n=256, seed=0)
+    assert np.array_equal(got[0]["trace"]["vpn"], ref["trace"]["vpn"])
+
+
+# ----------------------------------------------------- golden cache keys
+
+
+def test_cache_key_golden_digests():
+    """Pin ``runner._key`` hex digests: a refactor of ``_canon`` or the
+    chunked/meshed dispatch must never silently re-key — and thus
+    orphan — existing .sim_cache entries.  Regenerating these constants
+    is only legitimate when deliberately invalidating every cache."""
+    from repro.sim import runner
+
+    cases = [
+        (("radix", "bc", 150_000, 0, None),
+         "a12d63c168329072"),
+        (("victima", "xs", 150_000, 0, None),
+         "35f3abbee2b6e96a"),
+        (("np", "rnd", 2_000, 7, {"l2tlb_lat": 17}),
+         "bf3ddcef155371f6"),
+        (("radix", "gen", 1_000, 1, {"lat": Lat(l2=20)}),
+         "e7b012ade52f2a89"),
+        # numpy scalars key like the equivalent python number
+        (("radix", "bc", 10, 0, {"l2_sets": np.int32(64)}),
+         "608ce6642b850fb7"),
+        (("radix", "bc", 10, 0, {"l2_sets": 64}),
+         "608ce6642b850fb7"),
+        (("utopia", "dlrm", 150_000, 0,
+          {"restseg_ways": jnp.int32(8), "victima": True}),
+         "f9fb80121a22570e"),
+        (("revelator_virt", "gen", 150_000, 3,
+          {"rev_sig_bits": np.int64(16), "lat": Lat()}),
+         "865863b1872ee57a"),
+    ]
+    for args, want in cases:
+        assert runner._key(*args) == want, args
+
+
+# ------------------------------------------------- _stack_traces validation
+
+
+def test_stack_traces_names_the_mismatched_workload():
+    """A generator emitting different trace keys used to surface as a
+    bare KeyError deep in a dict comprehension; the error must name the
+    offending workload and both key sets."""
+    from repro.sim import runner, trace_gen
+
+    g_ok = trace_gen.generate("bc", n=64, seed=0)
+    g_missing = trace_gen.generate("xs", n=64, seed=0)
+    g_missing["trace"].pop("line")
+    with pytest.raises(ValueError, match=r"'xs'.*'bc'"):
+        runner._stack_traces([g_ok, g_missing], 64)
+
+    g_extra = trace_gen.generate("rnd", n=64, seed=0)
+    g_extra["trace"]["bogus"] = g_extra["trace"]["vpn"]
+    with pytest.raises(ValueError, match="bogus"):
+        runner._stack_traces([g_ok, g_extra], 64)
+
+    stacked = runner._stack_traces(
+        [g_ok, trace_gen.generate("xs", n=64, seed=0)], 64)
+    assert stacked["vpn"].shape == (64, 2)
+    assert stacked["ipa"].shape == (64, 2)
+
+
+def test_run_ladder_pads_partial_chunks_to_fixed_width(tmp_path,
+                                                       monkeypatch):
+    """A rerun with fewer missing workloads than the chunk width must
+    NOT shrink the dispatch: it pads up to ``chunk`` so the compiled
+    [S, chunk] shape is reused, and a forced mesh planned for ``chunk``
+    stays valid (a 1-missing rerun under ``--mesh 1x2`` used to die in
+    plan_mesh's divisibility check before simulating)."""
+    from repro.core.stages import zero_stats
+    from repro.sim import runner, systems
+
+    monkeypatch.setattr(systems, "REGISTRY", _tiny_registry())
+    monkeypatch.setattr(runner, "CACHE_DIR", str(tmp_path))
+    members = ("t_radix", "t_victima")
+
+    widths = []
+    runners_built = []
+
+    def fake_make_systems_runner(cfg, plan, stage_names=None):
+        runners_built.append(plan)
+
+        def fake_run(dyns, traces):
+            S = jax.tree.leaves(dyns)[0].shape[0]
+            W = jax.tree.leaves(traces)[0].shape[1]
+            widths.append((S, W))
+            return ([[zero_stats() for _ in range(W)] for _ in range(S)],
+                    [[{} for _ in range(W)] for _ in range(S)])
+        return fake_run
+
+    monkeypatch.setattr(runner, "make_systems_runner",
+                        fake_make_systems_runner)
+    out = runner.run_ladder("tiny", workloads=["bc"], n=64, seed=0,
+                            members=members, chunk=4, mesh=(1, 2))
+    assert widths == [(2, 4)]  # padded to the chunk, not shrunk to 1
+    assert len(runners_built) == 1  # one runner (compile) per fill
+    assert (runners_built[0].sys_dim, runners_built[0].wl_dim) == (1, 2)
+    assert set(out["t_radix"]) == {"bc"}  # padding lanes never stored
+    assert os.path.exists(runner._path("t_victima", "bc", 64, 0, None))
+    assert runner.LADDER_PERF[-1]["mesh"] == [1, 2]
+    assert runner.LADDER_PERF[-1]["chunk"] == 4
+
+
+# --------------------------------------------- multidev ladder equivalence
+
+
+_TINY_OV = dict(
+    l2tlb_sets=4, l2tlb_ways=4,
+    l1d4_sets=2, l1d4_ways=2, l1d2_sets=2, l1d2_ways=2,
+    l2_sets=64, l2_ways=8, l3_sets=64, l3_ways=8,
+    n_pages4=1 << 12, n_pages2=1 << 8, n_pagesh=1 << 8, n_feat=1 << 10,
+)
+
+
+def _tiny_registry():
+    from repro.sim import systems
+
+    fake = {}
+    for name, extra in [("t_radix", {}),
+                        ("t_victima", {"victima": True}),
+                        ("t_l2tlb", {"l2tlb_sets": 8, "l2tlb_lat": 17})]:
+        ov = {**_TINY_OV, **extra}
+        cfg = dataclasses.replace(SimConfig(), **ov)
+        fake[name] = systems.System(name=name, stages=default_stages(cfg),
+                                    overrides=ov)
+    return fake
+
+
+@multidev
+def test_run_ladder_multidev_cache_byte_identical(tmp_path, monkeypatch):
+    """run_ladder on a >= 4-device mesh must write cache entries
+    BYTE-identical to the forced single-device (1x1 mesh) run — the
+    acceptance bar for the whole sharded sweep engine.  3 members (odd:
+    exercises system padding) x 3 workloads in chunks of 2 (exercises
+    chunk padding + multi-chunk pipelining)."""
+    if jax.local_device_count() < 4:
+        pytest.skip("needs XLA_FLAGS=--xla_force_host_platform_device_count"
+                    "=4 (see the multidev CI job)")
+    from repro.sim import runner, systems
+
+    monkeypatch.setattr(systems, "REGISTRY", _tiny_registry())
+    members = ("t_radix", "t_victima", "t_l2tlb")
+    wls, n, seed = ["bc", "xs", "rnd"], 1200, 3
+
+    def fill(cache_dir, mesh):
+        monkeypatch.setattr(runner, "CACHE_DIR", str(cache_dir))
+        out = runner.run_ladder("tiny", workloads=wls, n=n, seed=seed,
+                                members=members, chunk=2, mesh=mesh)
+        assert set(out) == set(members)
+        return out
+
+    out_multi = fill(tmp_path / "multi", None)       # auto >= 4-dev mesh
+    out_single = fill(tmp_path / "single", (1, 1))   # forced 1x1 mesh
+
+    perf = runner.LADDER_PERF[-2:]
+    assert perf[0]["mesh"] != [1, 1], "auto plan did not shard"
+    assert perf[1]["mesh"] == [1, 1]
+    assert all(p["n_chunks"] == 2 for p in perf)
+
+    for s in members:
+        for w in wls:
+            key = runner._key(s, w, n, seed, None) + ".pkl"
+            with open(tmp_path / "multi" / key, "rb") as f:
+                blob_m = f.read()
+            with open(tmp_path / "single" / key, "rb") as f:
+                blob_s = f.read()
+            assert blob_m == blob_s, (s, w)
+            _assert_same_stats(out_single[s][w][0], out_multi[s][w][0],
+                               (s, w))
