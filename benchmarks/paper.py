@@ -356,6 +356,33 @@ def fig29_virt_miss_latency():
     return rows
 
 
+def backend_speedup_line(fills=None) -> str | None:
+    """One printable scan-vs-pallas line from this process's fills.
+
+    Compares ``compile_plus_sim_wall_s`` between the largest same-shape
+    (ladder, sim_n) fill pair that ran under both backends; returns
+    None when only one backend ran (the common case outside the
+    benchmark job, where nothing should print).
+    """
+    fills = runner.LADDER_PERF if fills is None else fills
+    best = {}
+    for f in fills:
+        key = (f["ladder"], f["sim_n"], f["n_workloads"])
+        best.setdefault(key, {})[f.get("backend", "scan")] = f
+    pairs = [(k, v) for k, v in best.items()
+             if "scan" in v and "pallas" in v]
+    if not pairs:
+        return None
+    key, v = max(pairs, key=lambda kv: kv[0][1] * kv[0][2])
+    scan_s = v["scan"]["compile_plus_sim_wall_s"]
+    pal_s = v["pallas"]["compile_plus_sim_wall_s"]
+    if not pal_s:
+        return None
+    return (f"[sweep-perf] {key[0]} n={key[1]}: scan {scan_s:.1f}s vs "
+            f"pallas {pal_s:.1f}s (block {v['pallas'].get('block')}) -> "
+            f"{scan_s / pal_s:.2f}x")
+
+
 def write_sweep_artifact(path: str | None = None) -> str:
     """Dump the sweep-throughput trajectory to BENCH_sweep.json.
 
@@ -363,15 +390,20 @@ def write_sweep_artifact(path: str | None = None) -> str:
     registry's current ladder shapes, so CI can diff sweep throughput
     across PRs — a registry entry silently falling out of its batched
     family shows up here as a shrunk systems-per-compile long before it
-    costs minutes.  Schema 2: each ``ladder_fills`` record splits the
+    costs minutes.  Schema 3: each ``ladder_fills`` record splits the
     pipeline stages (``trace_gen_wall_s`` = generation not hidden
     behind simulation, ``compile_plus_sim_wall_s`` = the compiled
     shard_map dispatches) and carries ``devices``/``mesh``/``chunk``
-    metadata; the host device count rides at top level too.
+    metadata plus — new in 3 — the access-loop ``backend``, pallas
+    ``block`` size, ``t_shards``/``t_rounds`` hand-off counts and
+    whether the chunk width was auto-tuned (``chunk_auto``); the host
+    device count rides at top level too.  When fills ran under both
+    backends, a scan-vs-pallas speedup line is printed so the perf
+    trajectory is visible per PR.
     """
     path = path or os.environ.get("REPRO_BENCH_SWEEP", "BENCH_sweep.json")
     artifact = {
-        "schema": 2,
+        "schema": 3,
         "sim_n": N,
         "devices": jax.local_device_count(),
         "workloads": WLS,
@@ -379,6 +411,9 @@ def write_sweep_artifact(path: str | None = None) -> str:
                     for lad, members in systems.LADDERS.items()},
         "ladder_fills": runner.LADDER_PERF,
     }
+    line = backend_speedup_line()
+    if line:
+        print(line, flush=True)
     with open(path, "w") as f:
         json.dump(artifact, f, indent=2, sort_keys=True)
         f.write("\n")

@@ -15,8 +15,22 @@ Three entry points share the step:
                      compiled call (vmap over ``Dyn`` sizing scalars) —
                      how the sweep covers a whole size ladder with a
                      single compilation.
+
+Every entry point runs the access loop through one of two BACKENDS
+(``REPRO_SIM_BACKEND`` or the ``backend=`` kwarg):
+
+  scan   — the ``jax.lax.scan`` carry loop described above (default);
+  pallas — the same step fused into a blocked Pallas kernel
+           (``repro.kernels.mmu_step``) that keeps the state carry
+           resident across trace blocks (interpret mode off-TPU).
+
+Both are bit-identical (tests/test_mmu_kernel.py); ``time_shards``
+additionally splits the trace time axis into speculative blocks with
+exact carry hand-off (``repro.sim.parallel.time_shard_scan``).
 """
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
@@ -32,10 +46,52 @@ from repro.core.stages import (Dyn, Feats, MMUState, Request, STAGES,
 from repro.core.stages.fold import accum_stats, collect_feats
 
 __all__ = [
-    "Dyn", "Feats", "MMUState", "SimConfig", "Stats", "WALK_HIST_BUCKETS",
-    "make_state", "make_step", "make_systems_runner", "simulate",
-    "simulate_batch", "simulate_systems",
+    "BACKENDS", "Dyn", "Feats", "MMUState", "SimConfig", "Stats",
+    "WALK_HIST_BUCKETS", "make_state", "make_step", "make_systems_runner",
+    "resolve_backend", "scan_accesses", "simulate", "simulate_batch",
+    "simulate_systems",
 ]
+
+# access-loop backends: "scan" = lax.scan carry loop, "pallas" = blocked
+# resident-state kernel (repro.kernels.mmu_step; interpret mode off-TPU)
+BACKENDS = ("scan", "pallas")
+_BACKEND_ENV = "REPRO_SIM_BACKEND"
+
+
+def resolve_backend(backend: str | None = None) -> str:
+    """The effective access-loop backend (kwarg > env > "scan").
+
+    Raises ValueError on unknown names so CLI layers can validate BEFORE
+    anything compiles (mirroring the sweep's name/tag validation).
+    """
+    b = backend or os.environ.get(_BACKEND_ENV, "").strip() or "scan"
+    if b not in BACKENDS:
+        raise ValueError(
+            f"unknown simulation backend {b!r} (from "
+            f"{'backend=' if backend else _BACKEND_ENV}); "
+            f"known: {', '.join(BACKENDS)}")
+    return b
+
+
+def scan_accesses(step, st0, trace, backend: str | None = None,
+                  consts=None, block: int | None = None):
+    """Run the per-access ``step`` over ``trace`` on the chosen backend.
+
+    Drop-in for ``lax.scan(step, st0, trace)[0]``.  ``step`` takes
+    ``(state, access)`` — or ``(state, access, consts)`` when ``consts``
+    is given (the pallas kernel cannot close over traced arrays, so
+    per-call constants like stacked ladder ``Dyn`` scalars ride as
+    explicit inputs on both backends to keep the call shape uniform).
+    """
+    if resolve_backend(backend) == "scan":
+        body = step if consts is None else (
+            lambda ss, acc: step(ss, acc, consts))
+        st, _ = jax.lax.scan(body, st0, trace)
+        return st
+    from repro.kernels import mmu_step  # deferred: pallas import is lazy
+
+    return mmu_step.blocked_scan(step, st0, trace, consts=consts,
+                                 block=block)
 
 
 def make_step(cfg: SimConfig, stage_names=None, dyn: Dyn | None = None):
@@ -123,6 +179,17 @@ def _final_hists(l2):
     return hd, ht
 
 
+def _finalize(st: MMUState, batch_dims: int = 0):
+    """Fold a finished state into the per-run output tuple (`batch_dims`
+    counts the leading workload/system axes on the state leaves)."""
+    hists = _final_hists
+    for _ in range(batch_dims):
+        hists = jax.vmap(hists)
+    hd, ht = hists(st.hier.l2)
+    return (st.stats, st.hier.n_l2_access, st.hier.n_l2_miss, hd, ht,
+            st.feats, st.pc4)
+
+
 def _extras_of(cfg, l2a, l2m, hd, ht, feats, pc4, index=lambda x: x):
     e = {"l2_access": int(index(l2a)), "l2_miss": int(index(l2m)),
          "hist_reuse_data": jax.device_get(index(hd)),
@@ -133,24 +200,43 @@ def _extras_of(cfg, l2a, l2m, hd, ht, feats, pc4, index=lambda x: x):
     return e
 
 
-def simulate(cfg: SimConfig, trace: dict, stage_names=None):
-    """Run one trace under `cfg`; returns (Stats, extras)."""
+def simulate(cfg: SimConfig, trace: dict, stage_names=None,
+             backend: str | None = None, block: int | None = None,
+             time_shards: int | None = None):
+    """Run one trace under `cfg`; returns (Stats, extras).
+
+    ``backend`` selects the access-loop implementation (see BACKENDS),
+    ``block`` the pallas trace-block size, and ``time_shards > 1``
+    splits the trace time axis into speculative blocks resolved to the
+    exact serial carry (``parallel.time_shard_scan``) — all three leave
+    the Stats bit-identical to the default scan.
+    """
     step = make_step(cfg, stage_names)
+    t = int(time_shards or 1)
+    if t > 1:
+        def body(st, tr):
+            return scan_accesses(step, st, tr, backend=backend,
+                                 block=block)
+        st, _ = parallel.time_shard_scan(
+            body, make_state(cfg), trace, t,
+            batch="map" if resolve_backend(backend) == "pallas"
+            else "vmap")
+        outs = jax.jit(_finalize)(st)
+    else:
+        @jax.jit
+        def run(tr):
+            st = scan_accesses(step, make_state(cfg), tr,
+                               backend=backend, block=block)
+            return _finalize(st)
 
-    @jax.jit
-    def run(tr):
-        st0 = make_state(cfg)
-        st, _ = jax.lax.scan(step, st0, tr)
-        hd, ht = _final_hists(st.hier.l2)
-        return st.stats, st.hier.n_l2_access, st.hier.n_l2_miss, hd, ht, \
-            st.feats, st.pc4
-
-    stats, l2a, l2m, hd, ht, feats, pc4 = run(trace)
+        outs = run(trace)
+    stats, l2a, l2m, hd, ht, feats, pc4 = outs
     stats = jax.tree.map(lambda x: jax.device_get(x), stats)
     return stats, _extras_of(cfg, l2a, l2m, hd, ht, feats, pc4)
 
 
-def simulate_batch(cfg: SimConfig, traces: dict, stage_names=None):
+def simulate_batch(cfg: SimConfig, traces: dict, stage_names=None,
+                   backend: str | None = None, block: int | None = None):
     """Run W workloads in lock-step: traces leaves are [T, W, ...].
 
     One compile + one scan of a vmapped step — on a single CPU core this
@@ -166,11 +252,10 @@ def simulate_batch(cfg: SimConfig, traces: dict, stage_names=None):
         base = make_state(cfg)
         st0 = jax.tree.map(
             lambda x: jnp.broadcast_to(x, (W,) + x.shape), base)
-        st, _ = jax.lax.scan(
-            lambda ss, acc: (jax.vmap(step)(ss, acc)[0], ()), st0, tr)
-        hd, ht = jax.vmap(_final_hists)(st.hier.l2)
-        return st.stats, st.hier.n_l2_access, st.hier.n_l2_miss, hd, ht, \
-            st.feats, st.pc4
+        st = scan_accesses(
+            lambda ss, acc: (jax.vmap(step)(ss, acc)[0], ()), st0, tr,
+            backend=backend, block=block)
+        return _finalize(st, batch_dims=1)
 
     stats, l2a, l2m, hd, ht, feats, pc4 = run(traces)
     stats = jax.tree.map(jax.device_get, stats)
@@ -180,34 +265,97 @@ def simulate_batch(cfg: SimConfig, traces: dict, stage_names=None):
     return per, extras
 
 
-def make_systems_runner(cfg: SimConfig, plan, stage_names=None):
+def _step_sw(cfg: SimConfig, stage_names):
+    """S x W-vmapped scan step with the per-system ``Dyn`` scalars
+    delivered as ``consts`` — the shape the pallas backend needs (a
+    kernel cannot close over traced arrays, so the system vmap moves
+    INSIDE the blocked scan instead of wrapping the kernel call)."""
+
+    def step_sw(ss, acc, dyns):
+        def per_sys(ss_s, dd):
+            step = make_step(cfg, stage_names, dyn=dd)
+            return jax.vmap(step)(ss_s, acc)[0]
+
+        return jax.vmap(per_sys)(ss, dyns), ()
+
+    return step_sw
+
+
+def _broadcast_state(cfg: SimConfig, lead: tuple[int, ...]) -> MMUState:
+    base = make_state(cfg)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, lead + x.shape), base)
+
+
+def make_systems_runner(cfg: SimConfig, plan, stage_names=None,
+                        backend: str | None = None,
+                        block: int | None = None,
+                        time_shards: int = 1):
     """Build a REUSABLE sharded S x W dispatch for one mesh plan.
 
     Returns ``run(dyns, traces) -> (per, extras)``.  The shard_map +
     jit wrapper is constructed once, so same-shape calls — e.g.
     ``runner.run_ladder``'s fixed-width workload chunks — trace, lower
     and compile exactly once instead of once per call.
+
+    ``backend`` picks the access-loop implementation per lane (see
+    BACKENDS), ``block`` the pallas trace-block size.  ``time_shards >
+    1`` splits the trace time axis into speculative blocks resolved to
+    the exact serial carry on a ("t",) device mesh
+    (``parallel.time_shard_scan``) — it currently requires a 1x1
+    ("sys", "wl") plan (the devices go to the time axis instead).  The
+    runner records the last hand-off round count on
+    ``run.last_time_shard_info``.
     """
+    backend = resolve_backend(backend)
+    t_shards = int(time_shards or 1)
+    if t_shards > 1 and plan.sys_dim * plan.wl_dim != 1:
+        raise ValueError(
+            f"time sharding needs a 1x1 ('sys', 'wl') plan (devices go "
+            f"to the 't' mesh axis), got {plan.describe()}")
 
     def run_systems(d, tr):
         # derive the workload width from tr: under shard_map this body
         # sees one [S_blk] x [W_blk] mesh block, not the full grid
         w_blk = jax.tree.leaves(tr)[0].shape[1]
-        base = make_state(cfg)
-        st0 = jax.tree.map(
-            lambda x: jnp.broadcast_to(x, (w_blk,) + x.shape), base)
+        st0 = _broadcast_state(cfg, (w_blk,))
 
-        def one_system(dd):
-            step = make_step(cfg, stage_names, dyn=dd)
-            st, _ = jax.lax.scan(
-                lambda ss, acc: (jax.vmap(step)(ss, acc)[0], ()), st0, tr)
-            hd, ht = jax.vmap(_final_hists)(st.hier.l2)
-            return (st.stats, st.hier.n_l2_access, st.hier.n_l2_miss,
-                    hd, ht, st.feats, st.pc4)
+        if backend == "scan":
+            def one_system(dd):
+                step = make_step(cfg, stage_names, dyn=dd)
+                st, _ = jax.lax.scan(
+                    lambda ss, acc: (jax.vmap(step)(ss, acc)[0], ()),
+                    st0, tr)
+                return _finalize(st, batch_dims=1)
 
-        return jax.vmap(one_system)(d)
+            return jax.vmap(one_system)(d)
+        # pallas: the system vmap moves inside the kernel's inner scan
+        # (see _step_sw) so the pallas_call itself is never vmapped
+        s_blk = jax.tree.leaves(d)[0].shape[0]
+        st = scan_accesses(_step_sw(cfg, stage_names),
+                           _broadcast_state(cfg, (s_blk, w_blk)), tr,
+                           backend=backend, consts=d, block=block)
+        return _finalize(st, batch_dims=2)
 
-    dispatch = parallel.shard_wrap(run_systems, plan)
+    if t_shards <= 1:
+        dispatch = parallel.shard_wrap(run_systems, plan)
+    else:
+        sw = _step_sw(cfg, stage_names)
+
+        def dispatch(dyns, traces):
+            S = jax.tree.leaves(dyns)[0].shape[0]
+            W = jax.tree.leaves(traces)[0].shape[1]
+
+            def body(st, tr):
+                return scan_accesses(sw, st, tr, backend=backend,
+                                     consts=dyns, block=block)
+
+            st, info = parallel.time_shard_scan(
+                body, _broadcast_state(cfg, (S, W)), traces, t_shards,
+                batch="map" if backend == "pallas" else "vmap")
+            run.last_time_shard_info = info
+            return jax.jit(_finalize, static_argnames="batch_dims")(
+                st, batch_dims=2)
 
     def run(dyns: Dyn, traces: dict):
         S = jax.tree.leaves(dyns)[0].shape[0]
@@ -221,11 +369,14 @@ def make_systems_runner(cfg: SimConfig, plan, stage_names=None):
                    for w in range(W)] for s in range(S)]
         return per, extras
 
+    run.last_time_shard_info = None
     return run
 
 
 def simulate_systems(cfg: SimConfig, dyns: Dyn, traces: dict,
-                     stage_names=None, plan=None):
+                     stage_names=None, plan=None,
+                     backend: str | None = None, block: int | None = None,
+                     time_shards: int = 1):
     """Run S shape-compatible systems x W workloads in ONE compiled call.
 
     `cfg` is the ladder's static base config (structures allocated at the
@@ -236,11 +387,18 @@ def simulate_systems(cfg: SimConfig, dyns: Dyn, traces: dict,
     mesh multiple (no divisibility precondition) and on a single device
     the 1x1 mesh runs the identical code path as an identity
     partitioning.  `plan` overrides the mesh factorization (see
-    ``parallel.plan_mesh``).  Returns (list[S] of list[W] Stats, extras).
-    One-shot form of ``make_systems_runner`` — callers dispatching the
-    same shapes repeatedly should hold on to a runner instead.
+    ``parallel.plan_mesh``).  ``backend``/``block``/``time_shards``
+    forward to ``make_systems_runner``; ``time_shards > 1`` defaults the
+    plan to 1x1 (the devices go to the time axis instead).  Returns
+    (list[S] of list[W] Stats, extras).  One-shot form of
+    ``make_systems_runner`` — callers dispatching the same shapes
+    repeatedly should hold on to a runner instead.
     """
     S = jax.tree.leaves(dyns)[0].shape[0]
     W = jax.tree.leaves(traces)[0].shape[1]
-    plan = plan or parallel.plan_mesh(S, W)
-    return make_systems_runner(cfg, plan, stage_names)(dyns, traces)
+    if plan is None:
+        plan = (parallel.plan_mesh(S, W, n_devices=1)
+                if int(time_shards or 1) > 1 else parallel.plan_mesh(S, W))
+    return make_systems_runner(cfg, plan, stage_names, backend=backend,
+                               block=block,
+                               time_shards=time_shards)(dyns, traces)

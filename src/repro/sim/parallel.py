@@ -29,6 +29,7 @@ layer (``mmu.simulate_systems``) may import it without a cycle.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 
 import jax
@@ -43,9 +44,11 @@ except ImportError:
 
 AXIS_SYS = "sys"
 AXIS_WL = "wl"
+AXIS_T = "t"
 
-__all__ = ["AXIS_SYS", "AXIS_WL", "MeshPlan", "plan_mesh", "build_mesh",
-           "shard_wrap", "shard_systems"]
+__all__ = ["AXIS_SYS", "AXIS_WL", "AXIS_T", "MeshPlan", "plan_mesh",
+           "build_mesh", "shard_wrap", "shard_systems", "pick_t_shards",
+           "time_shard_scan"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -169,6 +172,108 @@ def shard_wrap(fn, plan: MeshPlan):
         return out
 
     return call
+
+
+def pick_t_shards(n: int, requested: int) -> int:
+    """Largest divisor of the trace length ``n`` that is <= ``requested``.
+
+    Time blocks must tile the trace exactly — padding the time axis
+    would simulate phantom accesses and break bit-identity with the
+    serial scan — so a requested shard count that does not divide ``n``
+    is rounded DOWN to the nearest divisor (worst case 1: no sharding).
+    """
+    if n <= 0:
+        raise ValueError(f"cannot time-shard an empty trace (n={n})")
+    if requested < 1:
+        raise ValueError(f"time-shard count must be >= 1, got {requested}")
+    return max(t for t in range(1, min(requested, n) + 1) if n % t == 0)
+
+
+def _block_eq(a, b, t: int) -> jax.Array:
+    """Per-block (leading axis ``t``) bitwise equality of two pytrees."""
+    eqs = jax.tree.map(
+        lambda x, y: jnp.all((x == y).reshape(t, -1), axis=1), a, b)
+    return functools.reduce(jnp.logical_and, jax.tree.leaves(eqs))
+
+
+def time_shard_scan(block_fn, st0, trace, t_shards: int,
+                    batch: str = "vmap"):
+    """Run ``block_fn`` over ``t_shards`` trace blocks speculatively and
+    resolve the carry hand-off to the exact serial result.
+
+    ``block_fn(state, trace_block) -> state`` is one serial segment of
+    the access scan (any backend).  The trace's time axis is split into
+    ``t`` contiguous blocks; every block starts from a GUESSED carry
+    (cold ``st0`` in round 1) and all blocks run in parallel — on a
+    multi-device host the block axis is laid out on a 1-D ``("t",)``
+    mesh, so single-trace latency scales with devices.  After each
+    round the hand-off chain is re-seeded (``start[i+1] = end[i]``) and
+    re-run until a fixed point: block 0's start is exact by definition,
+    and block ``i``'s end is exact once its start matched the exact end
+    of block ``i-1``.  The exact-known prefix grows by >= 1 block per
+    round, so the loop terminates in <= ``t`` rounds and the returned
+    state is BIT-IDENTICAL to the serial scan.  Feedback-heavy MMU
+    state (``now``, pressure/MPKI counters) makes a cold guess almost
+    never coincide with the true carry, so realistic convergence IS the
+    worst case ``t`` rounds — the win is latency (each round is ``n/t``
+    long on ``t`` devices), not total work.
+
+    ``batch="vmap"`` runs blocks via ``jax.vmap``; ``batch="map"``
+    (required for the pallas backend, whose grid seeding must not be
+    rewritten by vmap batching) uses sequential ``lax.map``.
+
+    Returns ``(final_state, info)`` with ``info = {"t_shards", "rounds",
+    "requested"}``; ``t_shards`` is the requested count rounded down to
+    a divisor of the trace length (see ``pick_t_shards``).
+    """
+    if batch not in ("vmap", "map"):
+        raise ValueError(f"unknown batch mode {batch!r}")
+    n = jax.tree.leaves(trace)[0].shape[0]
+    t = pick_t_shards(n, t_shards)
+    if t == 1:
+        return block_fn(st0, trace), {
+            "t_shards": 1, "rounds": 1, "requested": int(t_shards)}
+
+    blocks = jax.tree.map(
+        lambda x: x.reshape((t, n // t) + x.shape[1:]), trace)
+    starts = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (t,) + x.shape), st0)
+
+    d = jax.local_device_count()
+    if batch == "vmap" and d > 1:
+        g = max(k for k in range(1, min(d, t) + 1) if t % k == 0)
+        if g > 1:
+            mesh = Mesh(np.asarray(jax.devices()[:g]), (AXIS_T,))
+            sh = NamedSharding(mesh, P(AXIS_T))
+            blocks = jax.device_put(blocks, sh)
+            starts = jax.device_put(starts, sh)
+
+    @jax.jit
+    def round_fn(starts, blocks):
+        if batch == "vmap":
+            ends = jax.vmap(block_fn)(starts, blocks)
+        else:
+            ends = jax.lax.map(lambda ab: block_fn(*ab), (starts, blocks))
+        new_starts = jax.tree.map(
+            lambda s0, e: jnp.concatenate([s0[None], e[:-1]]), st0, ends)
+        return ends, new_starts, _block_eq(new_starts, starts, t)
+
+    rounds = 0
+    known = 0
+    while known < t:
+        ends, new_starts, eq = round_fn(starts, blocks)
+        rounds += 1
+        eq = np.asarray(jax.device_get(eq))
+        # ends[0] came from the true st0, so it is exact; end i is exact
+        # iff its start was, i.e. iff the start we USED equals the exact
+        # end of block i-1 (eq[i]) and that end itself is exact
+        known = 1
+        while known < t and eq[known]:
+            known += 1
+        starts = new_starts
+    final = jax.tree.map(lambda e: e[-1], ends)
+    return final, {"t_shards": t, "rounds": rounds,
+                   "requested": int(t_shards)}
 
 
 def shard_systems(fn, dyns, traces, plan: MeshPlan | None = None):

@@ -15,6 +15,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import math
 import os
 import pickle
 import tempfile
@@ -32,7 +33,9 @@ jax.config.update("jax_persistent_cache_min_compile_time_secs", 5)
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import mmu
 from repro.core.mmu import make_systems_runner, simulate, simulate_batch
+from repro.kernels import mmu_step
 from repro.sim import parallel, systems, trace_gen
 
 CACHE_DIR = os.environ.get("REPRO_SIM_CACHE", "/root/repo/.sim_cache")
@@ -42,7 +45,15 @@ CACHE_DIR = os.environ.get("REPRO_SIM_CACHE", "/root/repo/.sim_cache")
 # whatever its missing-workload count — compiles exactly one [S, CHUNK]
 # shape (the old whole-missing-set dispatch recompiled for each distinct
 # count), and trace generation overlaps with the previous chunk's sim.
-CHUNK = int(os.environ.get("REPRO_SIM_CHUNK", 4))
+# REPRO_SIM_CHUNK=auto (the default) derives the width per fill from the
+# workload count via ``auto_chunk``; an integer pins it.
+_chunk_env = os.environ.get("REPRO_SIM_CHUNK", "auto").strip().lower()
+CHUNK: int | None = None if _chunk_env in ("", "auto") else int(_chunk_env)
+
+# auto_chunk ceiling: padded-lane waste shrinks with wider chunks but
+# compile time and per-dispatch memory grow; measured schema-2 fills put
+# the knee near 8 lanes on this container
+CHUNK_MAX = int(os.environ.get("REPRO_SIM_CHUNK_MAX", 8))
 
 # background trace-generation threads for the run_ladder producer pool
 GEN_WORKERS = int(os.environ.get("REPRO_GEN_WORKERS", 4))
@@ -50,10 +61,36 @@ GEN_WORKERS = int(os.environ.get("REPRO_GEN_WORKERS", 4))
 # perf-trajectory records: one entry per batched ladder fill this process
 # ran, with the pipeline stages split out (trace_gen_wall_s = generation
 # time NOT hidden behind simulation; compile_plus_sim_wall_s = the
-# compiled shard_map calls) plus devices/mesh metadata.  benchmarks/
+# compiled shard_map calls) plus devices/mesh metadata and — since
+# schema 3 — the access-loop backend, pallas block size, time-shard
+# count/rounds and whether the chunk was auto-tuned.  benchmarks/
 # paper.write_sweep_artifact dumps them to BENCH_sweep.json so CI can
 # track sweep-throughput regressions across PRs.
 LADDER_PERF: list[dict] = []
+
+
+def auto_chunk(n_workloads: int, cap: int | None = None) -> int:
+    """Pick the ladder dispatch width from the workload count.
+
+    The fill's wall time is ``n_dispatch * (overhead + chunk *
+    lane_cost)``: with one reusable compiled runner per fill, the
+    per-dispatch overhead is small against the per-lane sim cost, so
+    the measured-cost ordering is (1) fewest dispatches, (2) least
+    padded-lane waste — e.g. a 3-workload fill picks chunk=3 (one
+    dispatch, zero padding) where the old fixed default of 4 simulated
+    a fourth, discarded lane (+33% sim work).  Ties prefer the NARROWER
+    chunk (faster compile).  ``cap`` bounds the width (default
+    ``CHUNK_MAX``); the chunk count derives from the FULL workload list,
+    not the missing count, so partially-cached reruns keep hitting the
+    same compiled [S, chunk] shape.
+    """
+    if n_workloads <= 0:
+        raise ValueError(f"no workloads to chunk (n={n_workloads})")
+    cap = cap or CHUNK_MAX
+    return min(range(1, min(cap, n_workloads) + 1),
+               key=lambda c: (math.ceil(n_workloads / c),
+                              c * math.ceil(n_workloads / c) - n_workloads,
+                              c))
 
 
 def system_config(system: str):
@@ -176,11 +213,13 @@ def _stack_traces(gens, n: int) -> dict:
 
 
 def run_batch(system: str, workloads=None, n: int = 150_000, seed: int = 0,
-              overrides: dict | None = None, cache: bool = True):
+              overrides: dict | None = None, cache: bool = True,
+              backend: str | None = None, block: int | None = None):
     """Simulate one system over ALL workloads in a single vmapped scan.
 
     Fills the per-(system, workload) disk cache; returns dict
-    workload -> (stats, extras, spec).
+    workload -> (stats, extras, spec).  ``backend``/``block`` select the
+    access-loop implementation (bit-identical; never part of cache keys).
     """
     workloads = workloads or trace_gen.all_workloads()
     out = {}
@@ -198,7 +237,8 @@ def run_batch(system: str, workloads=None, n: int = 150_000, seed: int = 0,
         # radix): let make_step re-derive the stages from the final cfg
         stage_names = None if overrides else systems.get(system).stages
         per, extras = simulate_batch(cfg, _stack_traces(gens, n),
-                                     stage_names=stage_names)
+                                     stage_names=stage_names,
+                                     backend=backend, block=block)
         for w, g, st, ex in zip(missing, gens, per, extras):
             result = (_np_stats(st), ex, g["spec"])
             _store(_path(system, w, n, seed, overrides), result)
@@ -208,7 +248,9 @@ def run_batch(system: str, workloads=None, n: int = 150_000, seed: int = 0,
 
 def run_ladder(ladder: str, workloads=None, n: int = 150_000,
                seed: int = 0, cache: bool = True, members=None,
-               chunk: int | None = None, mesh=None):
+               chunk: int | None = None, mesh=None,
+               backend: str | None = None, block: int | None = None,
+               time_shards: int = 1):
     """Fill the cache for a whole system ladder through ONE compiled
     kernel, pipelined over a ("sys", "wl") device mesh.
 
@@ -226,7 +268,11 @@ def run_ladder(ladder: str, workloads=None, n: int = 150_000,
     entries stay byte-compatible with per-system ``run_batch`` results
     (pinned by the multidev tests).  `members` restricts the run to a
     subset of the ladder; `mesh=(sys, wl)` forces the mesh factorization
-    (debug).  Returns dict system -> dict workload -> result.
+    (debug).  ``backend``/``block``/``time_shards`` select the access
+    loop (scan or pallas; see ``mmu.BACKENDS``) — all bit-identical, so
+    cache entries never record the backend.  ``time_shards > 1``
+    requires a 1x1 mesh (devices go to the time axis).  Returns dict
+    system -> dict workload -> result.
     """
     members = tuple(members or systems.LADDERS[ladder])
     workloads = workloads or trace_gen.all_workloads()
@@ -251,13 +297,19 @@ def run_ladder(ladder: str, workloads=None, n: int = 150_000,
     # never shrink the dispatch width to the missing count: a
     # partially-cached rerun must reuse the SAME compiled [S, chunk]
     # shape (short groups pad below), and a forced mesh planned for
-    # `chunk` must stay valid however few workloads are left
-    chunk = chunk or CHUNK
+    # `chunk` must stay valid however few workloads are left — which is
+    # also why auto_chunk sees the FULL workload list, never `missing`
+    auto = chunk is None and CHUNK is None
+    chunk = chunk or CHUNK or auto_chunk(len(workloads))
+    if time_shards > 1 and mesh is None:
+        mesh = (1, 1)  # devices go to the ("t",) axis instead
     plan = parallel.plan_mesh(len(members), chunk,
                               force=tuple(mesh) if mesh else None)
+    backend = mmu.resolve_backend(backend)
     # ONE runner for all chunks: every chunk dispatches the same
     # [S, chunk] shape, so the shard_map kernel traces/compiles once
-    run_fn = make_systems_runner(cfg, plan)
+    run_fn = make_systems_runner(cfg, plan, backend=backend, block=block,
+                                 time_shards=time_shards)
     t_gen = t_sim = 0.0
     n_chunks = 0
     with ThreadPoolExecutor(
@@ -287,12 +339,18 @@ def run_ladder(ladder: str, workloads=None, n: int = 150_000,
                               g["spec"])
                     _store(_path(s, w, n, seed, None), result)
                     out[s][w] = result
+    tinfo = getattr(run_fn, "last_time_shard_info", None)
     LADDER_PERF.append({
         "ladder": ladder, "n_systems": len(members),
         "n_workloads": len(missing), "sim_n": n,
         "devices": jax.local_device_count(),
         "mesh": [plan.sys_dim, plan.wl_dim],
-        "chunk": chunk, "n_chunks": n_chunks,
+        "chunk": chunk, "chunk_auto": auto, "n_chunks": n_chunks,
+        "backend": backend,
+        "block": (mmu_step.pick_block(n, block)
+                  if backend == "pallas" else None),
+        "t_shards": tinfo["t_shards"] if tinfo else 1,
+        "t_rounds": tinfo["rounds"] if tinfo else None,
         "trace_gen_wall_s": round(t_gen, 3),
         "compile_plus_sim_wall_s": round(t_sim, 3),
     })
@@ -300,10 +358,14 @@ def run_ladder(ladder: str, workloads=None, n: int = 150_000,
 
 
 def run(system: str, workload: str, n: int = 150_000, seed: int = 0,
-        overrides: dict | None = None, cache: bool = True):
+        overrides: dict | None = None, cache: bool = True,
+        backend: str | None = None, block: int | None = None,
+        time_shards: int = 1):
     """Simulate one (system, workload). Returns (stats, extras, spec).
 
     Results are cached on disk — the benchmark harness reruns cheaply.
+    ``backend``/``block``/``time_shards`` pick the access-loop
+    implementation (bit-identical; never part of cache keys).
     """
     path = _path(system, workload, n, seed, overrides)
     got = _cached(path, cache)
@@ -316,7 +378,9 @@ def run(system: str, workload: str, n: int = 150_000, seed: int = 0,
     trace["ipa"] = jnp.full((len(gen["trace"]["vpn"]),), gen["spec"].ipa,
                             jnp.float32)
     stage_names = None if overrides else systems.get(system).stages
-    stats, extras = simulate(cfg, trace, stage_names=stage_names)
+    stats, extras = simulate(cfg, trace, stage_names=stage_names,
+                             backend=backend, block=block,
+                             time_shards=time_shards)
     result = (_np_stats(stats), extras, gen["spec"])
     if cache:
         _store(path, result)

@@ -22,6 +22,12 @@ query) and ``--mesh SxW`` pins the ladder ("sys", "wl") mesh
 factorization, e.g.
 
     python -m repro.sim.sweep --devices 4 --mesh 2x2 --tags headline
+
+Backend selection: ``--backend {scan,pallas}`` picks the access-loop
+implementation (bit-identical results; pallas runs in interpreter mode
+off-TPU) and ``--time-shards N`` splits each trace's time axis into N
+speculative blocks resolved to the exact serial carry — it needs a 1x1
+("sys", "wl") mesh, so it conflicts with ``--mesh`` unless that is 1x1.
 """
 from __future__ import annotations
 
@@ -29,6 +35,7 @@ import os
 import sys
 import time
 
+from repro.core import mmu
 from repro.sim import systems
 from repro.sim.runner import run_batch, run_ladder
 
@@ -81,9 +88,13 @@ def parse_args(args):
 
     ``--tags native,ablation`` (or ``--tags=...``) selects every system
     carrying any of the given registry tags; positional names add
-    individual systems on top.  ``opts`` carries the mesh debug flags:
+    individual systems on top.  ``opts`` carries the mesh debug flags —
     ``--mesh SxW`` (forced ("sys", "wl") factorization) and
-    ``--devices N`` (forced virtual host device count).
+    ``--devices N`` (forced virtual host device count) — plus the
+    access-loop knobs ``--backend {scan,pallas}`` and
+    ``--time-shards N``.  All values are validated HERE, before any
+    compilation: an unknown backend must die instantly, not after the
+    ladder compile (mirroring the --tags fix).
     """
     def _value(val, flag, what="a comma-separated value"):
         # "--tags --foo" used to swallow the next OPTION as a value;
@@ -105,8 +116,21 @@ def parse_args(args):
             raise SystemExit(f"{flag} wants a positive integer, got {val!r}")
         return int(val)
 
+    def _backend(val, flag):
+        val = _value(val, flag, "a backend name")
+        try:
+            return mmu.resolve_backend(val)
+        except ValueError as e:
+            raise SystemExit(str(e)) from None
+
+    def _tshards(val, flag):
+        if not _value(val, flag, "a shard count").isdigit() or int(val) < 1:
+            raise SystemExit(f"{flag} wants a positive integer, got {val!r}")
+        return int(val)
+
     names, tags = [], []
-    opts = {"mesh": None, "devices": None}
+    opts = {"mesh": None, "devices": None, "backend": None,
+            "time_shards": 1}
     it = iter(args or [])
     for a in it:
         if a == "--tags":
@@ -123,11 +147,26 @@ def parse_args(args):
             opts["devices"] = _devices(next(it, None), "--devices")
         elif a.startswith("--devices="):
             opts["devices"] = _devices(a.split("=", 1)[1], "--devices=")
+        elif a == "--backend":
+            opts["backend"] = _backend(next(it, None), "--backend")
+        elif a.startswith("--backend="):
+            opts["backend"] = _backend(a.split("=", 1)[1], "--backend=")
+        elif a == "--time-shards":
+            opts["time_shards"] = _tshards(next(it, None), "--time-shards")
+        elif a.startswith("--time-shards="):
+            opts["time_shards"] = _tshards(a.split("=", 1)[1],
+                                           "--time-shards=")
         elif a.startswith("-"):
             raise SystemExit(
-                f"unknown option {a!r} (only --tags/--mesh/--devices)")
+                f"unknown option {a!r} (only --tags/--mesh/--devices/"
+                f"--backend/--time-shards)")
         else:
             names.append(a)
+    if opts["time_shards"] > 1 and opts["mesh"] not in (None, (1, 1)):
+        raise SystemExit(
+            f"--time-shards needs a 1x1 ('sys', 'wl') mesh (devices go "
+            f"to the 't' axis), got --mesh "
+            f"{opts['mesh'][0]}x{opts['mesh'][1]}")
     return names, tags, opts
 
 
@@ -167,7 +206,9 @@ def main(selected=None):
         if not todo:
             continue
         t0 = time.time()
-        run_ladder(ladder, n=N, members=todo, mesh=opts["mesh"])
+        run_ladder(ladder, n=N, members=todo, mesh=opts["mesh"],
+                   backend=opts["backend"],
+                   time_shards=opts["time_shards"])
         done.update(todo)
         print(f"[sweep] ladder:{ladder:>11s} x all  {time.time()-t0:7.1f}s "
               f"({len(todo)} systems, 1 compile; "
@@ -176,7 +217,7 @@ def main(selected=None):
         if sysname in done:
             continue
         t0 = time.time()
-        run_batch(sysname, n=N)
+        run_batch(sysname, n=N, backend=opts["backend"])
         print(f"[sweep] {sysname:>18s} x all  {time.time()-t0:7.1f}s "
               f"(total {time.time()-t00:7.0f}s)", flush=True)
 

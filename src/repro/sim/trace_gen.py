@@ -8,6 +8,13 @@ data blocks exhibiting zero reuse (Fig. 11), and PTW latencies centered
 ≈137 cycles (Fig. 4).  vpns are page ids inside a contiguous VA region
 (heap-like), so upper PT levels exhibit realistic PWC locality while leaf
 PTE lines carry 8-page spatial clusters — the structure Victima exploits.
+
+Generation is no longer a serial pre-pass: ``generate`` is thread-safe
+and seed-stable (its own ``np.random.Generator`` per call, no module
+state), so ``generate_many`` and ``runner.run_ladder``'s producer pool
+overlap trace generation with the compiled simulate dispatches and the
+results stay bit-identical to one-at-a-time calls — the property the
+seed-keyed sim cache relies on.
 """
 from __future__ import annotations
 

@@ -353,7 +353,7 @@ def test_sweep_rejects_unknown_systems_before_simulating():
         sweep.main(["radix", "definitely_not_a_system"])
 
 
-_NO_OPTS = {"mesh": None, "devices": None}
+_NO_OPTS = {"mesh": None, "devices": None, "backend": None, "time_shards": 1}
 
 
 def test_sweep_parse_args_accepts_both_tag_forms():
@@ -370,9 +370,9 @@ def test_sweep_parse_args_mesh_and_devices():
     from repro.sim import sweep
 
     assert sweep.parse_args(["--mesh", "2x2", "--devices", "4"]) \
-        == ([], [], {"mesh": (2, 2), "devices": 4})
+        == ([], [], {**_NO_OPTS, "mesh": (2, 2), "devices": 4})
     assert sweep.parse_args(["--mesh=4x1", "radix"]) \
-        == (["radix"], [], {"mesh": (4, 1), "devices": None})
+        == (["radix"], [], {**_NO_OPTS, "mesh": (4, 1)})
     with pytest.raises(SystemExit, match="SYSxWL"):
         sweep.parse_args(["--mesh", "4"])
     with pytest.raises(SystemExit, match="positive integer"):
@@ -415,7 +415,7 @@ def test_run_ladder_reuses_cached_member_cells(tmp_path, monkeypatch):
 
     calls = []
 
-    def fake_make_systems_runner(cfg, plan, stage_names=None):
+    def fake_make_systems_runner(cfg, plan, stage_names=None, **kwargs):
         def fake_run(dyns, traces):
             import jax
             S = jax.tree.leaves(dyns)[0].shape[0]
@@ -438,9 +438,10 @@ def test_run_ladder_reuses_cached_member_cells(tmp_path, monkeypatch):
     with open(seeded, "rb") as f:
         assert f.read() == bytes0
     assert stat1.st_mtime_ns == stat0.st_mtime_ns
-    # ...and the three genuinely missing cells were simulated + stored
-    # in ONE dispatch, padded to the fixed chunk width (runner.CHUNK)
-    assert calls == [(len(members), runner.CHUNK)]
+    # ...and the three genuinely missing cells were simulated + stored in
+    # ONE dispatch at the auto-tuned chunk width (derived from the FULL
+    # workload list, so a partially-cached rerun reuses the same shape)
+    assert calls == [(len(members), runner.auto_chunk(len(wls)))]
     for s, w in [("victima", "bc"), ("radix", "bfs"), ("victima", "bfs")]:
         assert out[s][w][1] == {"stub": True}, (s, w)
         assert os.path.exists(runner._path(s, w, n, seed, None)), (s, w)

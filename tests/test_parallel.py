@@ -277,7 +277,7 @@ def test_run_ladder_pads_partial_chunks_to_fixed_width(tmp_path,
     widths = []
     runners_built = []
 
-    def fake_make_systems_runner(cfg, plan, stage_names=None):
+    def fake_make_systems_runner(cfg, plan, stage_names=None, **kwargs):
         runners_built.append(plan)
 
         def fake_run(dyns, traces):
