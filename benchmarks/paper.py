@@ -337,7 +337,7 @@ def fig28_guest_host_ptws():
     g = float(np.mean([metrics.ptw_reduction(base[w][0], out[w][0])
                        for w in WLS]))
     h = float(np.mean([
-        metrics.reduction(base[w][0].n_host_ptw, out[w][0].n_host_ptw)
+        metrics.host_ptw_reduction(base[w][0], out[w][0])
         for w in WLS]))
     return [("fig28_guest_ptw_red", us, f"{g*100:.0f}% (paper 50%)"),
             ("fig28_host_ptw_red", us, f"{h*100:.0f}% (paper 99%)")]
@@ -397,13 +397,18 @@ def write_sweep_artifact(path: str | None = None) -> str:
     metadata plus — new in 3 — the access-loop ``backend``, pallas
     ``block`` size, ``t_shards``/``t_rounds`` hand-off counts and
     whether the chunk width was auto-tuned (``chunk_auto``); the host
-    device count rides at top level too.  When fills ran under both
-    backends, a scan-vs-pallas speedup line is printed so the perf
-    trajectory is visible per PR.
+    device count rides at top level too.  New in 4: each fill carries
+    its one-compile accounting — ``n_members`` (family width vmapped
+    through the single dispatch graph), ``dispatch_compiles`` (actual
+    compile count of that graph, measured via ``jax_log_compiles``)
+    and ``one_compile`` (whether the invariant held; the time-shard
+    path re-jits per chunk and records False honestly).  When fills
+    ran under both backends, a scan-vs-pallas speedup line is printed
+    so the perf trajectory is visible per PR.
     """
     path = path or os.environ.get("REPRO_BENCH_SWEEP", "BENCH_sweep.json")
     artifact = {
-        "schema": 3,
+        "schema": 4,
         "sim_n": N,
         "devices": jax.local_device_count(),
         "workloads": WLS,

@@ -5,8 +5,6 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 
 def vtc_serving_hit_rates():

@@ -1,0 +1,47 @@
+"""Static-analysis subsystem: the repo's invariants as checkable passes.
+
+Four passes (see ``python -m repro.analysis --list``):
+
+- ``contracts`` — stage-contract checker (C00x): signatures, gating
+  tables, sized-1-when-off state, Stats fold/surface discipline.
+- ``lint`` — tracer-hygiene AST rules (TH00x) + Pallas resident-state
+  checks (PL00x).
+- ``jaxpr`` — jaxpr-equivalence over every discovered ladder family
+  (JX00x): proves dyn-gating yields ONE compile, abstract-trace only
+  (no device execution).
+- ``recompile`` — executes a tiny ladder fill and bounds the actual
+  ``run_systems`` compile count (RC001).  Runs the simulator, so it is
+  opt-in from the CLI and wired into tier-1 via the test suite.
+
+``run_static()`` is the no-execution subset CI runs before the
+compile-heavy jobs.
+"""
+from repro.analysis import contracts, jaxpr_equiv, lint, recompile
+
+PASSES = ("contracts", "lint", "jaxpr", "recompile")
+STATIC_PASSES = ("contracts", "lint", "jaxpr")
+
+
+def run_pass(name: str, progress=None) -> list:
+    if name == "contracts":
+        return contracts.run()
+    if name == "lint":
+        return lint.run()
+    if name == "jaxpr":
+        _, findings = jaxpr_equiv.check_all(progress=progress)
+        return findings
+    if name == "recompile":
+        return recompile.check_ladder_dispatch()
+    raise ValueError(f"unknown analysis pass {name!r} (know {PASSES})")
+
+
+def run_static(progress=None) -> list:
+    """All passes that neither execute nor compile anything."""
+    findings = []
+    for p in STATIC_PASSES:
+        findings += run_pass(p, progress=progress)
+    return findings
+
+
+__all__ = ["PASSES", "STATIC_PASSES", "contracts", "jaxpr_equiv", "lint",
+           "recompile", "run_pass", "run_static"]

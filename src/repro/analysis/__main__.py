@@ -1,0 +1,72 @@
+"""CLI: ``python -m repro.analysis [--pass name,...] [-q]``.
+
+Exit status 0 = every selected pass clean; 1 = findings (printed one
+per line, prefixed with their invariant code).  The default selection
+is the static set (contracts, lint, jaxpr) — no device execution, safe
+for lint-tier CI.  ``--pass recompile`` (or ``--all``) additionally
+executes a tiny ladder fill and bounds its real compile count.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro import analysis
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="one-compile invariant analyzer (see docs/"
+                    "architecture.md, 'Static invariants')")
+    ap.add_argument("--pass", dest="passes", default=None,
+                    help="comma-separated pass subset "
+                         f"(know: {', '.join(analysis.PASSES)}; "
+                         f"default: {', '.join(analysis.STATIC_PASSES)})")
+    ap.add_argument("--all", action="store_true",
+                    help="run every pass incl. the executing recompile "
+                         "guard")
+    ap.add_argument("--list", action="store_true",
+                    help="list passes and exit")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="suppress progress; print findings only")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for p in analysis.PASSES:
+            tag = "" if p in analysis.STATIC_PASSES else "  (executes)"
+            print(f"{p}{tag}")
+        return 0
+
+    if args.passes:
+        selected = [p.strip() for p in args.passes.split(",") if p.strip()]
+        unknown = [p for p in selected if p not in analysis.PASSES]
+        if unknown:
+            ap.error(f"unknown pass(es) {unknown}; know {analysis.PASSES}")
+    elif args.all:
+        selected = list(analysis.PASSES)
+    else:
+        selected = list(analysis.STATIC_PASSES)
+
+    progress = (lambda msg: None) if args.quiet else \
+        (lambda msg: print(msg, file=sys.stderr))
+
+    findings = []
+    for p in selected:
+        progress(f"[analysis] pass: {p}")
+        got = analysis.run_pass(p, progress=progress)
+        progress(f"[analysis]   {len(got)} finding(s)")
+        findings += got
+
+    for f in findings:
+        print(f)
+    if findings:
+        print(f"[analysis] FAILED: {len(findings)} finding(s) across "
+              f"{len(selected)} pass(es)", file=sys.stderr)
+        return 1
+    progress(f"[analysis] OK: {len(selected)} pass(es) clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

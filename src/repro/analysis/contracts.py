@@ -1,0 +1,396 @@
+"""Stage-contract checker: introspection + AST over ``core/stages/*``.
+
+Checked invariants (each finding is prefixed with its code):
+
+- C001 every registered stage exposes ``lookup(self, cfg, st, req,
+  need)`` and ``fill(self, cfg, st, req, out)`` with exactly those
+  parameters, a non-placeholder ``name`` matching its registry key, and
+  a bool ``past_l2`` declaration.
+- C002 every registry system composition validates (flags agree with
+  the stage list) and ends in a walker stage.
+- C003 the dyn-gating tables are closed: every ``DYN_GATED_STAGES``
+  entry names a real stage / SimConfig field / Dyn gate, and every
+  ``DYN_FIELDS`` entry is a SimConfig field set by ``dyn_of``.
+- C004 sized-1-when-off: state for a gated stage is allocated with the
+  ``<expr> if cfg.<flag> else 1`` (or ``max(<expr>, 1)``) convention in
+  ``make_state`` — an off lane carries a 1-entry structure, not a full
+  allocation, which is what keeps the ladder base state shape-shared.
+- C005/C006 every ``Stats`` field follows the ``n_*/sum_*/hist_*``
+  naming convention and is folded accumulatively (reads ``s0.<field>``)
+  in exactly one keyword of ``fold.accum_stats``'s ``Stats(...)``
+  return, with at most one *stage* source feeding it (single-writer).
+- C007 every ``Stats`` field is surfaced: read as ``stats.<field>``
+  somewhere in ``core/metrics.py`` or ``core/timing.py`` (an orphan
+  field is dead telemetry — an error, not a warning).
+- C008 stage code writes only into its OWN result slot:
+  ``out[...].info[...] = ...`` targets must be ``out[self.name]``.
+
+Every check takes explicit inputs (objects or file paths) so the test
+fixtures can aim it at deliberately broken stages; ``run()`` wires the
+real repo defaults.
+"""
+from __future__ import annotations
+
+import ast
+import inspect
+import re
+from pathlib import Path
+
+STAGES_DIR = Path(__file__).resolve().parents[1] / "core" / "stages"
+METRIC_PATHS = (
+    Path(__file__).resolve().parents[1] / "core" / "metrics.py",
+    Path(__file__).resolve().parents[1] / "core" / "timing.py",
+)
+
+LOOKUP_PARAMS = ("self", "cfg", "st", "req", "need")
+FILL_PARAMS = ("self", "cfg", "st", "req", "out")
+
+STATS_FIELD_RE = re.compile(r"^(n_|sum_|hist_)")
+
+# state fields allocated per gated feature: cfg gate flag -> MMUState
+# kwargs that must follow the sized-1-when-off convention.  The L3 TLB
+# gates on a size (l3tlb_sets > 0), hence the max(x, 1) variant.
+STATE_GATES = {
+    "pom": ("pom",),
+    "utopia": ("restseg4", "restseg2"),
+    "revelator": ("rev",),
+    "virt": ("ntlb", "pch"),
+    "collect": ("feats",),
+}
+STATE_MAX_GATES = ("l3tlb",)  # sized via max(cfg.*_sets, 1)
+
+
+# --------------------------------------------------------------- C001
+
+
+def check_stage_objects(stages=None) -> list:
+    from repro.core import stages as stage_mod
+
+    stages = stage_mod.STAGES if stages is None else stages
+    findings = []
+    for key, stg in stages.items():
+        cls = type(stg).__name__
+        if getattr(stg, "name", "?") in ("?", "", None):
+            findings.append(
+                f"C001 stage {cls}: placeholder/missing 'name' attribute")
+        elif stg.name != key:
+            findings.append(
+                f"C001 stage {cls}: name {stg.name!r} != registry key "
+                f"{key!r}")
+        if not isinstance(getattr(stg, "past_l2", None), bool):
+            findings.append(
+                f"C001 stage {cls}: 'past_l2' must be declared as a bool "
+                f"(got {getattr(stg, 'past_l2', None)!r})")
+        for meth, want in (("lookup", LOOKUP_PARAMS), ("fill", FILL_PARAMS)):
+            fn = getattr(type(stg), meth, None)
+            if fn is None:
+                findings.append(f"C001 stage {cls}: missing {meth}()")
+                continue
+            got = tuple(inspect.signature(fn).parameters)
+            if got != want:
+                findings.append(
+                    f"C001 stage {cls}: {meth}{got} violates the stage "
+                    f"contract {meth}{want}")
+    return findings
+
+
+# --------------------------------------------------------------- C002
+
+
+def check_registry(registry=None) -> list:
+    from repro.core import stages as stage_mod
+    from repro.sim import systems
+
+    registry = systems.REGISTRY if registry is None else registry
+    findings = []
+    for name, sys_ in registry.items():
+        unknown = [s for s in sys_.stages if s not in stage_mod.STAGES]
+        if unknown:
+            findings.append(
+                f"C002 system {name!r}: unknown stages {unknown}")
+            continue
+        if sys_.stages[-1] not in stage_mod.WALK_STAGES:
+            findings.append(
+                f"C002 system {name!r}: composition must end in a walker "
+                f"stage {stage_mod.WALK_STAGES}, ends in "
+                f"{sys_.stages[-1]!r}")
+        try:
+            stage_mod.validate_stages(sys_.config(), sys_.stages)
+        except ValueError as e:
+            findings.append(f"C002 system {name!r}: {e}")
+    return findings
+
+
+# --------------------------------------------------------------- C003
+
+
+def check_dyn_tables() -> list:
+    import dataclasses
+
+    from repro.core import stages as stage_mod
+    from repro.core.stages.base import DYN_FIELDS, Dyn, SimConfig
+    from repro.sim import systems
+
+    cfg_fields = {f.name for f in dataclasses.fields(SimConfig)}
+    findings = []
+    for stage, (cfg_field, gate) in systems.DYN_GATED_STAGES.items():
+        if stage not in stage_mod.STAGES:
+            findings.append(
+                f"C003 DYN_GATED_STAGES[{stage!r}]: not a registered stage")
+        if cfg_field not in cfg_fields:
+            findings.append(
+                f"C003 DYN_GATED_STAGES[{stage!r}]: {cfg_field!r} is not "
+                f"a SimConfig field")
+        if gate not in Dyn._fields:
+            findings.append(
+                f"C003 DYN_GATED_STAGES[{stage!r}]: gate {gate!r} is not "
+                f"a Dyn field")
+    for f in DYN_FIELDS:
+        if f not in cfg_fields:
+            findings.append(f"C003 DYN_FIELDS entry {f!r}: not a "
+                            f"SimConfig field")
+    return findings
+
+
+# --------------------------------------------------------------- C004
+
+
+def _gated_ok(node: ast.expr, flag: str) -> bool:
+    """Does ``node`` contain ``<x> if cfg.<flag> else 1``?"""
+    for sub in ast.walk(node):
+        if (isinstance(sub, ast.IfExp)
+                and isinstance(sub.orelse, ast.Constant)
+                and sub.orelse.value == 1):
+            for t in ast.walk(sub.test):
+                if (isinstance(t, ast.Attribute) and t.attr == flag
+                        and isinstance(t.value, ast.Name)
+                        and t.value.id == "cfg"):
+                    return True
+    return False
+
+
+def _max1_ok(node: ast.expr) -> bool:
+    """Does ``node`` contain ``max(<x>, 1)``?"""
+    for sub in ast.walk(node):
+        if (isinstance(sub, ast.Call) and isinstance(sub.func, ast.Name)
+                and sub.func.id == "max"
+                and any(isinstance(a, ast.Constant) and a.value == 1
+                        for a in sub.args)):
+            return True
+    return False
+
+
+def check_make_state(path=None, state_gates=None, max_gates=None) -> list:
+    path = Path(path) if path else STAGES_DIR / "base.py"
+    state_gates = STATE_GATES if state_gates is None else state_gates
+    max_gates = STATE_MAX_GATES if max_gates is None else max_gates
+    tree = ast.parse(path.read_text())
+    fn = next((n for n in ast.walk(tree)
+               if isinstance(n, ast.FunctionDef) and n.name == "make_state"),
+              None)
+    if fn is None:
+        return [f"C004 {path.name}: no make_state() found"]
+    call = next((n for n in ast.walk(fn)
+                 if isinstance(n, ast.Call) and isinstance(n.func, ast.Name)
+                 and n.func.id == "MMUState"), None)
+    if call is None:
+        return [f"C004 {path.name}: make_state() does not build MMUState"]
+    kwargs = {kw.arg: kw.value for kw in call.keywords if kw.arg}
+
+    findings = []
+    for flag, state_fields in state_gates.items():
+        for sf in state_fields:
+            if sf not in kwargs:
+                findings.append(
+                    f"C004 make_state: expected state field {sf!r} "
+                    f"(gated by cfg.{flag}) is not allocated")
+            elif not _gated_ok(kwargs[sf], flag):
+                findings.append(
+                    f"C004 make_state: state field {sf!r} must follow the "
+                    f"sized-1-when-off convention "
+                    f"('<sets> if cfg.{flag} else 1') so off lanes carry "
+                    f"a 1-entry structure")
+    for sf in max_gates:
+        if sf not in kwargs:
+            findings.append(
+                f"C004 make_state: expected state field {sf!r} is not "
+                f"allocated")
+        elif not _max1_ok(kwargs[sf]):
+            findings.append(
+                f"C004 make_state: state field {sf!r} gates on a size and "
+                f"must be allocated via max(<sets>, 1)")
+    return findings
+
+
+# ---------------------------------------------------------- C005/C006
+
+
+def _stage_sources(node: ast.expr, env: dict) -> set:
+    """Stage names feeding an accumulation expression.
+
+    ``out["x"]`` / ``_hit32(out, "x")`` attribute to stage x;
+    ``walk_res`` to the walker; locals resolve through ``env`` (the
+    name -> sources map built while walking accum_stats's body).
+    """
+    src: set = set()
+    for sub in ast.walk(node):
+        if (isinstance(sub, ast.Subscript) and isinstance(sub.value, ast.Name)
+                and sub.value.id == "out"
+                and isinstance(sub.slice, ast.Constant)):
+            src.add(str(sub.slice.value))
+        elif isinstance(sub, ast.Name):
+            if sub.id == "walk_res":
+                src.add("<walker>")
+            elif sub.id in env:
+                src |= env[sub.id]
+        elif (isinstance(sub, ast.Call) and isinstance(sub.func, ast.Name)
+                and sub.func.id == "_hit32" and len(sub.args) >= 2
+                and isinstance(sub.args[1], ast.Constant)):
+            src.add(str(sub.args[1].value))
+    return src
+
+
+def check_stats_fold(stats_fields=None, fold_path=None) -> list:
+    """C005: every Stats field folded accumulatively in accum_stats;
+    C006: at most one stage source per field (single-writer)."""
+    if stats_fields is None:
+        from repro.core.stages.base import Stats
+
+        stats_fields = Stats._fields
+    fold_path = Path(fold_path) if fold_path else STAGES_DIR / "fold.py"
+    tree = ast.parse(fold_path.read_text())
+    fn = next((n for n in ast.walk(tree)
+               if isinstance(n, ast.FunctionDef)
+               and n.name == "accum_stats"), None)
+    if fn is None:
+        return [f"C005 {fold_path.name}: no accum_stats() found"]
+
+    findings = []
+    for f in stats_fields:
+        if not STATS_FIELD_RE.match(f):
+            findings.append(
+                f"C005 Stats.{f}: violates the n_*/sum_*/hist_* naming "
+                f"convention")
+
+    # taint map: local name -> stage sources, in statement order
+    env: dict = {}
+    ret_call = None
+    for stmt in fn.body:
+        if isinstance(stmt, ast.Return) and isinstance(stmt.value, ast.Call):
+            ret_call = stmt.value
+        for sub in ast.walk(stmt):
+            if isinstance(sub, ast.Assign):
+                srcs = _stage_sources(sub.value, env)
+                for tgt in sub.targets:
+                    for t in ast.walk(tgt):
+                        if isinstance(t, ast.Name):
+                            env[t.id] = env.get(t.id, set()) | srcs
+    if (ret_call is None or not isinstance(ret_call.func, ast.Name)
+            or ret_call.func.id != "Stats"):
+        return findings + [
+            f"C005 {fold_path.name}: accum_stats must return Stats(...)"]
+
+    folded = {kw.arg: kw.value for kw in ret_call.keywords if kw.arg}
+    for f in stats_fields:
+        if f not in folded:
+            findings.append(
+                f"C005 Stats.{f}: not folded — accum_stats's Stats(...) "
+                f"return has no {f}= keyword (orphan field: the "
+                f"accumulator silently drops it)")
+            continue
+        reads_s0 = any(
+            isinstance(sub, ast.Attribute) and sub.attr == f
+            and isinstance(sub.value, ast.Name) and sub.value.id == "s0"
+            for sub in ast.walk(folded[f]))
+        if not reads_s0:
+            findings.append(
+                f"C005 Stats.{f}: fold is not accumulative — the "
+                f"expression never reads s0.{f}, so per-step values "
+                f"overwrite instead of accumulate")
+        stage_srcs = {s for s in _stage_sources(folded[f], env)
+                      if s not in ("_walk",)}
+        if len(stage_srcs) > 1:
+            findings.append(
+                f"C006 Stats.{f}: written by {len(stage_srcs)} stages "
+                f"({sorted(stage_srcs)}); every Stats field must have "
+                f"exactly one writer")
+    for extra in sorted(set(folded) - set(stats_fields)):
+        findings.append(
+            f"C005 accum_stats folds unknown field {extra!r} (not a "
+            f"Stats field)")
+    return findings
+
+
+# --------------------------------------------------------------- C007
+
+
+def check_stats_surfaced(stats_fields=None, metric_paths=None) -> list:
+    if stats_fields is None:
+        from repro.core.stages.base import Stats
+
+        stats_fields = Stats._fields
+    metric_paths = [Path(p) for p in (metric_paths or METRIC_PATHS)]
+
+    read: set = set()
+    for p in metric_paths:
+        for sub in ast.walk(ast.parse(p.read_text())):
+            if isinstance(sub, ast.Attribute):
+                read.add(sub.attr)
+    return [
+        f"C007 Stats.{f}: orphan — accumulated every step but never read "
+        f"by {'/'.join(p.name for p in metric_paths)}; surface it as a "
+        f"metric or delete it"
+        for f in stats_fields if f not in read
+    ]
+
+
+# --------------------------------------------------------------- C008
+
+
+def check_stage_info_writes(stage_dir=None) -> list:
+    stage_dir = Path(stage_dir) if stage_dir else STAGES_DIR
+    findings = []
+    for path in sorted(stage_dir.glob("*.py")):
+        if path.name in ("base.py", "fold.py", "__init__.py"):
+            continue
+        tree = ast.parse(path.read_text())
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Assign):
+                continue
+            for tgt in node.targets:
+                # match out[<X>].info[...] = ...
+                if not (isinstance(tgt, ast.Subscript)
+                        and isinstance(tgt.value, ast.Attribute)
+                        and tgt.value.attr == "info"
+                        and isinstance(tgt.value.value, ast.Subscript)
+                        and isinstance(tgt.value.value.value, ast.Name)
+                        and tgt.value.value.value.id == "out"):
+                    continue
+                key = tgt.value.value.slice
+                own = (isinstance(key, ast.Attribute)
+                       and key.attr == "name"
+                       and isinstance(key.value, ast.Name)
+                       and key.value.id == "self")
+                if not own:
+                    findings.append(
+                        f"C008 {path.name}:{node.lineno}: stage writes "
+                        f"into a foreign result slot "
+                        f"(out[{ast.unparse(key)}].info); stages may only "
+                        f"publish into out[self.name].info")
+    return findings
+
+
+# ---------------------------------------------------------------- run
+
+
+def run() -> list:
+    """All contract checks against the real repo; returns findings."""
+    findings = []
+    findings += check_stage_objects()
+    findings += check_registry()
+    findings += check_dyn_tables()
+    findings += check_make_state()
+    findings += check_stats_fold()
+    findings += check_stats_surfaced()
+    findings += check_stage_info_writes()
+    return findings

@@ -1,0 +1,247 @@
+"""jaxpr-equivalence pass: prove every ladder family is one-compile.
+
+A ladder family batches into one vmapped ``simulate_systems`` compile
+*only if* every member's per-access step traces to the same computation
+graph — i.e. all config differences flow through traced ``Dyn`` values,
+never through Python control flow.  A single ``if cfg_dependent:`` or
+``int(tracer)`` silently splits the family into per-member compiles with
+no functional test failing.
+
+This pass traces ``mmu.make_step`` for every member of every
+``discover_ladders()`` family with that member's *concrete* dyn closed
+over (exactly the divergence-sensitive configuration: a Python branch
+on a dyn value produces a structurally different jaxpr, while correct
+gating produces jaxprs identical up to constant values).  Each jaxpr is
+canonicalized — serial variable renaming, recursive canonicalization of
+nested jaxprs in eqn params — and compared line-by-line against the
+family's first member; on mismatch the finding names the first
+diverging equation and its primitives on both sides.
+
+Tracing uses ``jax.make_jaxpr`` over ``ShapeDtypeStruct`` state/access
+pytrees, so no device buffers are allocated and nothing executes: the
+pass is safe for lint-tier CI.  A second, cheap sub-check traces each
+family's step once with *abstract* dyn (dyn as a traced argument, the
+shape the real batched dispatch sees) so any ``int(tracer)``-style
+concretization inside stage code surfaces as a named finding instead
+of a deep stack trace at sweep time.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+def _core():
+    """jax core types across the 0.4.x reorganizations."""
+    import jax
+
+    try:  # jax >= 0.4.33
+        from jax.extend import core as jex_core
+        return jex_core.Jaxpr, jex_core.ClosedJaxpr, jex_core.Literal
+    except (ImportError, AttributeError):
+        return jax.core.Jaxpr, jax.core.ClosedJaxpr, jax.core.Literal
+
+
+def _aval_str(aval) -> str:
+    dtype = getattr(aval, "dtype", None)
+    shape = getattr(aval, "shape", ())
+    return f"{getattr(dtype, 'name', dtype)}[{','.join(map(str, shape))}]"
+
+
+def canonicalize(jaxpr) -> list:
+    """Canonical per-equation lines for a (Closed)Jaxpr.
+
+    Variables are renamed serially in first-use order; nested jaxprs in
+    eqn params (scan/cond/custom_jvp bodies) are canonicalized
+    recursively; literal *values* are kept (members of a correctly
+    gated family share the same base config, so their literals agree —
+    only closed-over consts, which appear as constvars here, may
+    differ).  Returns ``[(primitive_name, line), ...]`` with a final
+    ``("return", ...)`` entry.
+    """
+    Jaxpr, ClosedJaxpr, Literal = _core()
+    jx = jaxpr.jaxpr if isinstance(jaxpr, ClosedJaxpr) else jaxpr
+
+    env: dict = {}
+
+    def name(v) -> str:
+        if isinstance(v, Literal):
+            return f"lit({v.val!r}):{_aval_str(v.aval)}"
+        if v not in env:
+            env[v] = f"v{len(env)}"
+        return f"{env[v]}:{_aval_str(v.aval)}"
+
+    def param(v) -> str:
+        if isinstance(v, (Jaxpr, ClosedJaxpr)):
+            return "jaxpr{" + ";".join(ln for _, ln in canonicalize(v)) + "}"
+        if isinstance(v, (tuple, list)):
+            return "(" + ",".join(param(x) for x in v) + ")"
+        if isinstance(v, dict):
+            return ("{" + ",".join(f"{k}:{param(x)}"
+                                   for k, x in sorted(v.items())) + "}")
+        if callable(v):
+            return getattr(v, "__name__", type(v).__name__)
+        return repr(v)
+
+    lines = []
+    for v in jx.constvars:
+        name(v)
+    for v in jx.invars:
+        name(v)
+    for eqn in jx.eqns:
+        params = ",".join(f"{k}={param(v)}"
+                          for k, v in sorted(eqn.params.items()))
+        outs = " ".join(name(o) for o in eqn.outvars)
+        ins = " ".join(name(i) for i in eqn.invars)
+        lines.append((eqn.primitive.name,
+                      f"{outs} = {eqn.primitive.name}[{params}] {ins}"))
+    lines.append(("return", "return " + " ".join(name(v)
+                                                 for v in jx.outvars)))
+    return lines
+
+
+def _structs():
+    """ShapeDtypeStruct pytrees for (state, access-record) tracing."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.sim import trace_gen
+
+    g = trace_gen.generate("rnd", n=8, seed=0)
+    acc = {k: jax.ShapeDtypeStruct((), jnp.asarray(v[:1]).dtype)
+           for k, v in g["trace"].items()}
+    acc["ipa"] = jax.ShapeDtypeStruct((), jnp.float32)
+    return acc
+
+
+def _state_struct(cfg):
+    import jax
+
+    from repro.core.stages import make_state
+
+    return jax.eval_shape(lambda: make_state(cfg))
+
+
+def member_jaxpr(base_cfg, dyn, stage_names=None):
+    """Trace one family member's per-access step (concrete dyn closed
+    over) without executing it; returns a ClosedJaxpr."""
+    import jax
+
+    from repro.core import mmu
+
+    step = mmu.make_step(base_cfg, stage_names, dyn=dyn)
+    return jax.make_jaxpr(step)(_state_struct(base_cfg), _structs())
+
+
+def diff_canonical(ref_name, ref_lines, name, lines) -> str | None:
+    """First structural divergence between two canonical jaxprs, or
+    None when alpha-equivalent.  Names the diverging primitive."""
+    n = min(len(ref_lines), len(lines))
+    for i in range(n):
+        if ref_lines[i] != lines[i]:
+            pa, la = ref_lines[i]
+            pb, lb = lines[i]
+            return (f"members '{ref_name}' and '{name}' diverge at eqn "
+                    f"{i}/{max(len(ref_lines), len(lines))}: primitive "
+                    f"'{pa}' vs '{pb}'\n      {ref_name}: {la[:160]}\n"
+                    f"      {name}: {lb[:160]}")
+    if len(ref_lines) != len(lines):
+        longer, which = ((ref_lines, ref_name)
+                         if len(ref_lines) > len(lines) else (lines, name))
+        extra = [p for p, _ in longer[n:]][:8]
+        return (f"members '{ref_name}' ({len(ref_lines)} eqns) and "
+                f"'{name}' ({len(lines)} eqns) differ in length; extra "
+                f"primitives on '{which}': {extra}")
+    return None
+
+
+@dataclass
+class FamilyReport:
+    family: str
+    members: list
+    n_members: int = 0
+    n_eqns: int = 0
+    equivalent: bool = False
+    findings: list = field(default_factory=list)
+
+
+def check_family(fam_name: str, members, progress=None) -> FamilyReport:
+    """Prove (or refute, with a named primitive) one-compile for one
+    discovered ladder family."""
+    from repro.core.stages import Dyn, dyn_of
+    from repro.sim import systems
+
+    members = list(members)
+    rep = FamilyReport(family=fam_name, members=members,
+                       n_members=len(members))
+    base_cfg = systems.ladder_base_config(members=members)
+
+    ref_name = None
+    ref_lines = None
+    for m in members:
+        if progress:
+            progress(f"  tracing {fam_name}/{m}")
+        dyn = dyn_of(systems.config(m))
+        try:
+            lines = canonicalize(member_jaxpr(base_cfg, dyn))
+        except Exception as e:  # a member that cannot trace at all
+            rep.findings.append(
+                f"JX002 family '{fam_name}': member '{m}' failed to "
+                f"trace abstractly: {type(e).__name__}: {e}")
+            continue
+        if ref_lines is None:
+            ref_name, ref_lines = m, lines
+            rep.n_eqns = len(lines)
+            continue
+        d = diff_canonical(ref_name, ref_lines, m, lines)
+        if d is not None:
+            rep.findings.append(
+                f"JX001 family '{fam_name}' is NOT one-compile: {d}")
+
+    # abstract-dyn trace: the batched dispatch's view (dyn is a traced
+    # argument) — catches int(tracer)/if-on-dyn concretization loudly
+    import jax
+    import jax.numpy as jnp
+
+    dyn0 = dyn_of(base_cfg)
+    dyn_struct = Dyn(*[jax.ShapeDtypeStruct(jnp.shape(v), jnp.asarray(v).dtype)
+                       for v in dyn0])
+    try:
+        from repro.core import mmu
+
+        jax.eval_shape(
+            lambda st, acc, dd: mmu.make_step(base_cfg, None, dyn=dd)(st, acc),
+            _state_struct(base_cfg), _structs(), dyn_struct)
+    except Exception as e:
+        rep.findings.append(
+            f"JX003 family '{fam_name}': step does not trace with "
+            f"abstract Dyn (a stage concretizes a traced value): "
+            f"{type(e).__name__}: {e}")
+
+    rep.equivalent = not rep.findings
+    return rep
+
+
+def check_all(progress=None):
+    """Run the pass over every discovered family.
+
+    Returns ``(reports, findings)`` where findings is a flat list of
+    human-readable violation strings (empty = all families one-compile).
+    """
+    from repro.sim import systems
+
+    reports = []
+    findings = []
+    for fam, members in sorted(systems.discover_ladders().items()):
+        rep = check_family(fam, members, progress=progress)
+        reports.append(rep)
+        findings.extend(rep.findings)
+    return reports, findings
+
+
+def family_metadata() -> dict:
+    """Cheap (trace-free) family metadata for perf artifacts:
+    ``{family: {"n_members": int, "members": [...]}}``."""
+    from repro.sim import systems
+
+    return {fam: {"n_members": len(members), "members": sorted(members)}
+            for fam, members in systems.discover_ladders().items()}

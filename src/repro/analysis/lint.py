@@ -1,0 +1,291 @@
+"""Tracer-hygiene lint: AST rules over stage/kernel code.
+
+Inside ``make_step``'s composition everything downstream of the state,
+request, and Dyn pytrees is a jax tracer; Python-level decisions on
+those values either crash at trace time or — worse — silently
+specialize the compile on one member's value and split the one-compile
+family.  These rules flag the patterns *statically*, before any trace:
+
+- TH001 ``int()``/``float()``/``bool()`` on a traced value (concretizes
+  the tracer; under abstract dyn this is a ConcretizationTypeError, and
+  under concrete dyn it silently bakes one member's value into the
+  graph).
+- TH002 ``if``/``while``/``assert``/ternary on a traced value
+  (Python control flow forks the traced graph per member; use
+  ``jnp.where``/``lax.cond``).  Structure tests are exempt:
+  ``x is None`` / ``name in out`` are pytree-level, not value-level.
+- TH003 ``np.*`` calls on traced values (silently falls back to host
+  numpy, concretizing; use ``jnp``).
+- TH004 Python iteration directly over a traced pytree/array (e.g.
+  ``for v in req.dyn``): loops over traced values unroll or crash.
+  Only *direct* iteration over a traced parameter (or an
+  attribute/subscript chain on one) is flagged — iterating a Python
+  list of tracers (``jax.tree.leaves(...)``) is legitimate.
+
+Taint model: function parameters with conventional traced names
+(``st``, ``req``, ``out``, ``acc``, ``dyn``, ...) are roots; locals
+assigned from tainted expressions inherit taint in statement order.
+Reads of static metadata (``.shape``/``.ndim``/``.dtype``/``.size``)
+break the taint — shapes are Python values even on tracers.
+
+A separate structural check (PL00x) pins the resident-state discipline
+of the Pallas kernel in ``kernels/mmu_step.py``:
+
+- PL001 every BlockSpec feeding ``out_specs`` (the resident state) has
+  a constant ``index_map`` (ignores the grid index) — state must alias
+  the same buffer across grid steps;
+- PL002 ``pallas_call`` passes no ``input_output_aliases`` (state flows
+  init_refs -> out_refs through the explicit step-0 seed; aliasing
+  would silently break the speculative time-shard replay);
+- PL003 the kernel seeds its resident outputs at grid step 0
+  (``@pl.when(pl.program_id(0) == 0)``).
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parents[1]
+
+DEFAULT_FILES = (
+    *sorted((SRC / "core" / "stages").glob("*.py")),
+    SRC / "core" / "mmu.py",
+    SRC / "kernels" / "mmu_step.py",
+)
+PALLAS_FILE = SRC / "kernels" / "mmu_step.py"
+
+# parameter names that conventionally carry traced pytrees in stage /
+# step / kernel code (see the stage contract in core/stages/base.py)
+TRACED_PARAMS = frozenset({
+    "st", "st0", "req", "need", "out", "acc", "ss", "dyn", "dd", "dyns",
+    "walk_res", "s0", "trace", "traces", "tr", "consts", "carry", "state",
+})
+
+# attribute reads that yield static Python values even on tracers
+STATIC_ATTRS = frozenset({"shape", "ndim", "dtype", "size", "_fields",
+                          "aval", "sharding"})
+
+
+def _is_structure_test(node: ast.expr) -> bool:
+    """``x is None`` / ``k in out`` — pytree-structure tests, exempt."""
+    return (isinstance(node, ast.Compare)
+            and all(isinstance(op, (ast.Is, ast.IsNot, ast.In, ast.NotIn))
+                    for op in node.ops))
+
+
+class _FunctionLint:
+    def __init__(self, path_name: str, findings: list):
+        self.path = path_name
+        self.findings = findings
+        self.env: set = set()
+        self.param_roots: frozenset = frozenset()
+
+    # ---- taint
+
+    def tainted(self, node) -> bool:
+        if isinstance(node, ast.Attribute) and node.attr in STATIC_ATTRS:
+            return False
+        if _is_structure_test(node):
+            return False
+        if isinstance(node, ast.Name):
+            return node.id in self.env
+        if isinstance(node, ast.Lambda):  # deferred body: not a value read
+            return False
+        return any(self.tainted(c) for c in ast.iter_child_nodes(node))
+
+    def _direct_chain_root(self, node):
+        """Name at the root of a pure attribute/subscript chain (no
+        calls), else None."""
+        while isinstance(node, (ast.Attribute, ast.Subscript)):
+            node = node.value
+        return node.id if isinstance(node, ast.Name) else None
+
+    # ---- walk
+
+    def run(self, fn: ast.FunctionDef):
+        self.env = {a.arg for a in
+                    (*fn.args.posonlyargs, *fn.args.args,
+                     *fn.args.kwonlyargs)
+                    if a.arg in TRACED_PARAMS}
+        self.param_roots = frozenset(self.env)
+        if not self.env:
+            return
+        for stmt in ast.walk(fn):
+            self._check(stmt)
+
+    def _taint_target(self, tgt):
+        # taint only what the assignment binds/mutates: plain names, the
+        # container of a subscript/attribute store — NEVER names inside
+        # a subscript's index expression (out[stg.name] taints 'out',
+        # not 'stg')
+        if isinstance(tgt, ast.Name):
+            self.env.add(tgt.id)
+        elif isinstance(tgt, (ast.Tuple, ast.List)):
+            for el in tgt.elts:
+                self._taint_target(el)
+        elif isinstance(tgt, (ast.Subscript, ast.Attribute, ast.Starred)):
+            root = self._direct_chain_root(
+                tgt.value if isinstance(tgt, ast.Starred) else tgt)
+            if root is not None:
+                self.env.add(root)
+
+    def _flag(self, node, code, msg):
+        self.findings.append(f"{code} {self.path}:{node.lineno}: {msg}")
+
+    def _check(self, node):
+        if isinstance(node, ast.Assign):
+            if self.tainted(node.value):
+                for tgt in node.targets:
+                    self._taint_target(tgt)
+        elif isinstance(node, ast.Call):
+            fname = node.func.id if isinstance(node.func, ast.Name) else None
+            if fname in ("int", "float", "bool") and any(
+                    self.tainted(a) for a in node.args):
+                self._flag(node, "TH001",
+                           f"{fname}() on a traced value concretizes the "
+                           f"tracer (splits the one-compile family / "
+                           f"ConcretizationTypeError under vmapped Dyn)")
+            root = (self._direct_chain_root(node.func)
+                    if isinstance(node.func, ast.Attribute) else None)
+            if root == "np" and any(self.tainted(a) for a in node.args):
+                self._flag(node, "TH003",
+                           "np.* on a traced value concretizes it on "
+                           "host — use jnp")
+        elif isinstance(node, (ast.If, ast.While)):
+            if self.tainted(node.test):
+                kw = "while" if isinstance(node, ast.While) else "if"
+                self._flag(node, "TH002",
+                           f"Python `{kw}` on a traced value forks the "
+                           f"trace per member — use jnp.where/lax.cond")
+        elif isinstance(node, ast.IfExp):
+            if self.tainted(node.test):
+                self._flag(node, "TH002",
+                           "ternary on a traced value forks the trace "
+                           "per member — use jnp.where")
+        elif isinstance(node, ast.Assert):
+            if self.tainted(node.test):
+                self._flag(node, "TH002",
+                           "assert on a traced value — use "
+                           "checkify/debug.check or drop it")
+        elif isinstance(node, (ast.For, ast.comprehension)):
+            # narrow by design: only DIRECT iteration over a traced
+            # parameter (or a call-free chain on one) — iterating a
+            # Python list of tracers (tree.leaves, jaxpr consts) is fine
+            it = node.iter
+            root = self._direct_chain_root(it)
+            if root is not None and root in self.param_roots:
+                self._flag(it, "TH004",
+                           f"Python loop directly over traced "
+                           f"{root!r} (e.g. Dyn) unrolls/crashes — "
+                           f"use jax.tree.map or traced ops")
+
+
+def check_files(paths=None) -> list:
+    """Tracer-hygiene lint over stage/kernel files; returns findings."""
+    paths = [Path(p) for p in (paths or DEFAULT_FILES)]
+    findings: list = []
+    for path in paths:
+        if path.name == "__init__.py":
+            continue
+        tree = ast.parse(path.read_text())
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                _FunctionLint(path.name, findings).run(node)
+    # nested defs are linted twice (own pass + enclosing pass): dedupe
+    return list(dict.fromkeys(findings))
+
+
+# ------------------------------------------------------- Pallas checks
+
+
+def _lambda_ignores_grid_index(lam: ast.Lambda) -> bool:
+    args = lam.args.args
+    if not args:
+        return True
+    grid = args[0].arg
+    return not any(isinstance(n, ast.Name) and n.id == grid
+                   for n in ast.walk(lam.body))
+
+
+def check_pallas(path=None) -> list:
+    """Resident-state discipline of the blocked-scan Pallas kernel."""
+    path = Path(path) if path else PALLAS_FILE
+    tree = ast.parse(path.read_text())
+    findings: list = []
+
+    # classify spec-helper functions by their BlockSpec index_map lambda
+    constant_helpers: set = set()
+    blocked_helpers: set = set()
+    for fn in ast.walk(tree):
+        if not isinstance(fn, ast.FunctionDef):
+            continue
+        for call in ast.walk(fn):
+            if (isinstance(call, ast.Call)
+                    and isinstance(call.func, ast.Attribute)
+                    and call.func.attr == "BlockSpec"):
+                lam = next((a for a in call.args
+                            if isinstance(a, ast.Lambda)), None)
+                if lam is None:
+                    continue
+                if _lambda_ignores_grid_index(lam):
+                    constant_helpers.add(fn.name)
+                else:
+                    blocked_helpers.add(fn.name)
+
+    calls = [n for n in ast.walk(tree)
+             if isinstance(n, ast.Call)
+             and ((isinstance(n.func, ast.Attribute)
+                   and n.func.attr == "pallas_call")
+                  or (isinstance(n.func, ast.Name)
+                      and n.func.id == "pallas_call"))]
+    if not calls:
+        return [f"PL001 {path.name}: no pallas_call found"]
+
+    for call in calls:
+        kw = {k.arg: k.value for k in call.keywords if k.arg}
+        if "input_output_aliases" in kw:
+            findings.append(
+                f"PL002 {path.name}:{call.lineno}: pallas_call passes "
+                f"input_output_aliases — resident state must flow "
+                f"init_refs -> out_refs via the step-0 seed, not "
+                f"aliasing (breaks the time-shard replay)")
+        out_specs = kw.get("out_specs")
+        if out_specs is None:
+            findings.append(
+                f"PL001 {path.name}:{call.lineno}: pallas_call has no "
+                f"out_specs — resident state outputs must declare "
+                f"constant-index_map BlockSpecs")
+            continue
+        used = {n.func.id for n in ast.walk(out_specs)
+                if isinstance(n, ast.Call) and isinstance(n.func, ast.Name)}
+        bad = used & blocked_helpers
+        if bad:
+            findings.append(
+                f"PL001 {path.name}:{call.lineno}: out_specs uses "
+                f"grid-indexed BlockSpec helper(s) {sorted(bad)} — "
+                f"resident state must keep a constant index_map so the "
+                f"buffer persists across grid steps")
+        elif not (used & constant_helpers):
+            findings.append(
+                f"PL001 {path.name}:{call.lineno}: out_specs references "
+                f"no constant-index_map BlockSpec helper — resident "
+                f"state discipline cannot be verified")
+
+    seeded = any(
+        isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute)
+        and n.func.attr == "when"
+        and any(isinstance(c, ast.Call)
+                and isinstance(c.func, ast.Attribute)
+                and c.func.attr == "program_id"
+                for a in n.args for c in ast.walk(a))
+        for n in ast.walk(tree))
+    if not seeded:
+        findings.append(
+            f"PL003 {path.name}: kernel never seeds resident outputs at "
+            f"grid step 0 (no pl.when(pl.program_id(...) == 0) guard) — "
+            f"out_refs start uninitialized")
+    return findings
+
+
+def run(paths=None, pallas_path=None) -> list:
+    return check_files(paths) + check_pallas(pallas_path)

@@ -15,7 +15,7 @@ folded into the cache state and updated on insert/evict.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Sequence
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

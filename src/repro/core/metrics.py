@@ -39,6 +39,49 @@ def ptw_reduction(base_stats, new_stats) -> float:
     return reduction(base_stats.n_demand_ptw, new_stats.n_demand_ptw)
 
 
+def host_ptw_reduction(base_stats, new_stats) -> float:
+    """Virtualized runs: reduction in demand *host* walks (Fig. 28)."""
+    return reduction(base_stats.n_host_ptw, new_stats.n_host_ptw)
+
+
+def stage_hit_rates(stats) -> dict:
+    """Fraction of accesses resolved at each translation level (the
+    per-stage decomposition behind the MPKI/latency headlines)."""
+    n = max(float(stats.n_access), 1.0)
+    return {
+        "l1_tlb": float(stats.n_l1tlb_hit) / n,
+        "l2_tlb": float(stats.n_l2tlb_hit) / n,
+        "victima": float(stats.n_victima_hit) / n,
+        "l3_tlb": float(stats.n_l3tlb_hit) / n,
+        "pom": float(stats.n_pom_hit) / n,
+    }
+
+
+def bg_walk_fraction(stats) -> float:
+    """Fraction of all PTWs issued in the background (Victima's
+    TLB-block promotion walks — off the critical path)."""
+    total = float(stats.n_demand_ptw) + float(stats.n_bg_ptw)
+    return float(stats.n_bg_ptw) / max(total, 1.0)
+
+
+def nested_hit_rates(stats) -> dict:
+    """Virtualized walks: per-access rates of nested-TLB and
+    nested-Victima-block hits inside the 2D walker, next to the demand
+    host-walk rate they displace."""
+    n = max(float(stats.n_access), 1.0)
+    return {
+        "ntlb": float(stats.n_ntlb_hit) / n,
+        "nvictima": float(stats.n_nvictima_hit) / n,
+        "host_ptw": float(stats.n_host_ptw) / n,
+    }
+
+
+def rev_enroll_rate(stats) -> float:
+    """Revelator enrollments per demand walk (signature-table ingest
+    pressure: ~1.0 means every walk trains the table)."""
+    return float(stats.n_rev_enroll) / max(float(stats.n_demand_ptw), 1.0)
+
+
 def restseg_hit_rate(stats) -> float:
     """Fraction of RestSeg probes resolved without any FlexSeg walk
     (Utopia: probes happen on L2-TLB / Victima / L3 / POM misses)."""
@@ -114,8 +157,24 @@ def high_reuse_fraction(hist: np.ndarray, thresh: int = 21) -> float:
     return float(reuse_distribution(hist)[thresh:].sum())
 
 
-def walk_latency_histogram(stats):
-    """(bucket_start_cycles, fraction) pairs for the Fig. 4 distribution."""
-    h = np.asarray(stats.hist_walk, dtype=np.float64)
+def _hist_fractions(hist) -> list:
+    """(bucket_start_cycles, fraction) pairs on the 10-cycle grid."""
+    h = np.asarray(hist, dtype=np.float64)
     frac = h / max(h.sum(), 1.0)
     return [(i * 10, f) for i, f in enumerate(frac)]
+
+
+def walk_latency_histogram(stats):
+    """(bucket_start_cycles, fraction) pairs for the Fig. 4 distribution."""
+    return _hist_fractions(stats.hist_walk)
+
+
+def restseg_probe_histogram(stats):
+    """RestSeg tag-probe latency distribution (same grid as Fig. 4)."""
+    return _hist_fractions(stats.hist_restseg)
+
+
+def rev_verify_histogram(stats):
+    """Revelator verification-walk latency distribution (overlapped;
+    critical-path only on mispredict)."""
+    return _hist_fractions(stats.hist_rev_verify)

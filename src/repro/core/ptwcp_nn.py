@@ -94,7 +94,6 @@ def train_mlp(X, y, feat_idx, hidden, layers=2, steps=300, seed=0,
             + jnp.log1p(jnp.exp(-jnp.abs(logit))))
 
     lr = 0.05
-    m = [ (jnp.zeros_like(w), jnp.zeros_like(b)) for w, b in ws]
     g_fn = jax.jit(jax.grad(loss))
     for t in range(steps):
         g = g_fn(ws)

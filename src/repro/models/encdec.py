@@ -119,7 +119,6 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos,
     x = constrain(L.embed_apply(params["embed"], tokens), "act")
     B_ = tokens.shape[0]
     Ss = cache["xk"].shape[2]
-    spos = jnp.broadcast_to(jnp.arange(Ss)[None, :], (B_, Ss))
 
     def scan_fn(x, inp):
         lp, kc, vc, xk, xv = inp

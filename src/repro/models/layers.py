@@ -9,7 +9,7 @@ is the TPU-idiomatic MXU pattern.
 """
 from __future__ import annotations
 
-import dataclasses
+import os
 from typing import Optional
 
 import jax
@@ -166,7 +166,7 @@ def chunked_attention(q, k, v, q_pos, k_pos, causal: bool,
     scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
 
     def body(carry, inp):
-        m, l, acc = carry
+        m, lse, acc = carry
         kc, vc, kpc = inp
         s = einsum_f32("bqkgh,bckh->bkgqc", qg, kc) * scale
         d = q_pos[:, None, None, :, None] - kpc[:, None, None, None, :]
@@ -179,7 +179,7 @@ def chunked_attention(q, k, v, q_pos, k_pos, causal: bool,
         m2 = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m2[..., None])
         corr = jnp.exp(m - m2)
-        l2 = l * corr + jnp.sum(p, axis=-1)
+        l2 = lse * corr + jnp.sum(p, axis=-1)
         pv = einsum_f32("bkgqc,bckh->bkgqh", p.astype(vc.dtype), vc)
         acc2 = acc * corr[..., None] + pv
         return (m2, l2, acc2), ()
@@ -187,13 +187,12 @@ def chunked_attention(q, k, v, q_pos, k_pos, causal: bool,
     m0 = jnp.full((B, K, G, Sq), -jnp.inf, jnp.float32)
     l0 = jnp.zeros((B, K, G, Sq), jnp.float32)
     a0 = jnp.zeros((B, K, G, Sq, hd), jnp.float32)
-    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, kps))
-    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    (m, lse, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, kps))
+    out = acc / jnp.maximum(lse, 1e-30)[..., None]
     out = jnp.moveaxis(out, 3, 1).reshape(B, Sq, K * G, hd)
     return out.astype(q.dtype)
 
 
-import os
 _MASK_KV_UPDATE = os.environ.get("REPRO_MASK_KV", "0") == "1"
 
 ATTN_CHUNK_THRESHOLD = 8192  # Sq·Sk above which the chunked path is used

@@ -33,10 +33,15 @@ class Model:
         self.constrain = constrain or (lambda t, kind: t)
         if cfg.family == "moe":
             self._ffn_init = moe.moe_init
-            self._ffn_apply = lambda p, x: moe.moe_apply(p, x, cfg)
+
+            def ffn_apply(p, x):
+                return moe.moe_apply(p, x, cfg)
         else:
             self._ffn_init = L.mlp_init
-            self._ffn_apply = lambda p, x: L.mlp_apply(p, x)
+
+            def ffn_apply(p, x):
+                return L.mlp_apply(p, x)
+        self._ffn_apply = ffn_apply
 
     # ------------------------------------------------------------ init
 

@@ -7,7 +7,7 @@ positions3).  MoE swaps the FFN through `ffn_apply` (repro.models.moe).
 from __future__ import annotations
 
 from functools import partial
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

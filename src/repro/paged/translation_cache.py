@@ -23,7 +23,6 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import ptwcp
 from repro.core.assoc import RRIP_MAX
 from repro.paged import block_table as btab
 

@@ -20,7 +20,6 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.paged import block_table as btab
 from repro.paged import translation_cache as vtc_mod

@@ -8,7 +8,7 @@ Cross-pod gradient compression (error-feedback int8) hooks in through
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -23,7 +23,6 @@ import time
 from typing import Callable, Optional
 
 import jax
-import numpy as np
 
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.train.train_step import TrainState

@@ -1,0 +1,18 @@
+"""Deliberately broken inputs for the `repro.analysis` passes.
+
+Each file here violates a specific set of checked invariants so the
+tests can assert the analyzer catches — and *names* — every one:
+
+- ``broken_stage.py`` — stage-contract violations (C001 signature /
+  name / past_l2, C008 foreign info write) and tracer-hygiene
+  violations (TH001 int()/float() on traced values, TH002 branching on
+  a traced/Dyn value, TH003 np.* on a tracer, TH004 Python loop over a
+  traced pytree).
+- ``broken_fold.py`` — Stats fold violations (C005 orphan field /
+  non-accumulative fold / naming convention, C006 multi-writer).
+- ``broken_metrics.py`` — a metrics module that surfaces only some
+  fields, leaving an orphan for C007.
+
+These modules are never executed by the simulator; the contract and
+lint passes consume them as AST/objects only.
+"""

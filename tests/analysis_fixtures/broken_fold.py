@@ -1,0 +1,16 @@
+"""An accum_stats that drops, overwrites, and double-writes fields."""
+
+
+def Stats(**kw):  # stub so the fixture parses/lints standalone
+    return kw
+
+
+def accum_stats(s0, out, walk_res):
+    l1 = out["l1_tlb"].info["hit"]
+    shared = out["l1_tlb"].info["hit"] + out["l2_tlb"].info["hit"]
+    return Stats(
+        n_used=s0.n_used + l1,                   # clean
+        n_overwrite=out["l2_tlb"].info["miss"],  # C005: never reads s0
+        n_shared=s0.n_shared + shared,           # C006: two stage writers
+        # n_orphan deliberately missing          # C005: not folded
+    )

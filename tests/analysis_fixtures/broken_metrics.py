@@ -1,0 +1,5 @@
+"""A metrics module that reads n_used but never n_orphan (C007)."""
+
+
+def used_rate(stats):
+    return float(stats.n_used)

@@ -1,0 +1,31 @@
+"""A stage that violates every stage-contract and tracer-hygiene rule.
+
+Kept import-clean (numpy only) so tests can instantiate ``BrokenStage``
+for the introspection checks without touching the simulator.
+"""
+import numpy as np
+
+
+class BrokenStage:
+    name = "?"          # C001: placeholder name
+    past_l2 = "yes"     # C001: past_l2 must be a bool
+
+    def lookup(self, cfg, state, req):  # C001: wrong parameter list
+        return int(state)  # TH001: int() concretizes a tracer
+
+    def fill(self, cfg, st, req, out):
+        out["l2_tlb"].info["stolen"] = 0  # C008: foreign result slot
+        if st.valid:  # TH002: Python branch on a traced value
+            st = st.bump
+        total = np.sum(st.counts)  # TH003: host numpy on a tracer
+        for v in st:  # TH004: Python loop over a traced pytree
+            total = total + v
+        return float(req.vpn)  # TH001 again
+
+
+def gated_probe(cfg, st, dyn):
+    # TH002: branching on a Dyn gate splits the one-compile family —
+    # exactly the bug the jaxpr pass names as a JX001 divergence
+    if dyn.rev_en:
+        return st
+    return st

@@ -4,7 +4,7 @@ import os
 # strictly dryrun.py-local (assignment requirement).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
-import jax
+import jax  # noqa: E402  (env vars above must be set before jax imports)
 
 jax.config.update("jax_compilation_cache_dir",
                   os.environ.get("JAX_CACHE", "/root/repo/.jax_cache"))

@@ -1,0 +1,211 @@
+"""The one-compile invariant analyzer: passes clean on the repo, and
+each deliberately broken fixture is caught with a finding that NAMES
+the violated invariant (C00x / TH00x / PL00x / JX00x / RC001).
+
+Layout mirrors the analyzer: contract checks, tracer-hygiene lint,
+jaxpr-equivalence (incl. the full-family one-compile pin), the
+recompile guard, and the CLI's exit-code contract.
+"""
+import importlib.util
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import __main__ as analysis_cli
+from repro.analysis import contracts, jaxpr_equiv, lint, recompile
+
+FIXTURES = Path(__file__).parent / "analysis_fixtures"
+
+
+def _load_fixture(name):
+    spec = importlib.util.spec_from_file_location(name, FIXTURES / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# ------------------------------------------------- repo must be clean
+
+
+def test_repo_contracts_clean():
+    assert contracts.run() == []
+
+
+def test_repo_lint_clean():
+    assert lint.run() == []
+
+
+# --------------------------------------------------- contract checker
+
+
+def test_bad_signature_stage_named():
+    mod = _load_fixture("broken_stage")
+    findings = contracts.check_stage_objects({"badsig": mod.BrokenStage()})
+    text = "\n".join(findings)
+    assert all(f.startswith("C001") for f in findings)
+    assert "placeholder/missing 'name'" in text
+    assert "'past_l2' must be declared as a bool" in text
+    # the finding names the violated contract, not just the method
+    assert "violates the stage contract" in text
+    assert "('self', 'cfg', 'st', 'req', 'need')" in text
+
+
+def test_foreign_info_write_named():
+    findings = contracts.check_stage_info_writes(FIXTURES)
+    assert len(findings) == 1
+    assert findings[0].startswith("C008")
+    assert "foreign result slot" in findings[0]
+    assert "out[self.name].info" in findings[0]
+
+
+def test_stats_fold_fixture_named():
+    fields = ("n_used", "n_orphan", "n_overwrite", "n_shared", "bad_name")
+    findings = contracts.check_stats_fold(fields, FIXTURES / "broken_fold.py")
+    text = "\n".join(findings)
+    assert "C005 Stats.bad_name: violates the n_*/sum_*/hist_* naming" in text
+    assert "C005 Stats.n_orphan: not folded" in text
+    assert "C005 Stats.n_overwrite: fold is not accumulative" in text
+    assert "C006 Stats.n_shared" in text and "exactly one writer" in text
+    # the clean field stays clean
+    assert "Stats.n_used:" not in text
+
+
+def test_orphan_stats_field_named():
+    findings = contracts.check_stats_surfaced(
+        ("n_used", "n_orphan"), [FIXTURES / "broken_metrics.py"])
+    assert len(findings) == 1
+    assert findings[0].startswith("C007 Stats.n_orphan: orphan")
+
+
+# ------------------------------------------------ tracer-hygiene lint
+
+
+def test_tracer_hygiene_fixture_all_rules_fire():
+    findings = lint.check_files([FIXTURES / "broken_stage.py"])
+    codes = sorted({f.split()[0] for f in findings})
+    assert codes == ["TH001", "TH002", "TH003", "TH004"]
+    text = "\n".join(findings)
+    # int(tracer) and the Dyn-branch are each caught and explained
+    assert "concretizes the tracer" in text
+    assert "forks the trace per member" in text
+    assert sum(f.startswith("TH001") for f in findings) == 2  # int + float
+
+
+def test_pallas_resident_state_discipline_clean():
+    assert lint.check_pallas() == []
+
+
+# ----------------------------------------------------- jaxpr pass
+
+
+def test_canonicalize_is_alpha_invariant():
+    a = jax.make_jaxpr(lambda x: jnp.sin(x) + x)(jnp.zeros(4))
+    b = jax.make_jaxpr(lambda y: jnp.sin(y) + y)(jnp.zeros(4))
+    la, lb = jaxpr_equiv.canonicalize(a), jaxpr_equiv.canonicalize(b)
+    assert la == lb
+    assert jaxpr_equiv.diff_canonical("a", la, "b", lb) is None
+
+
+def test_jaxpr_divergence_names_primitive():
+    a = jaxpr_equiv.canonicalize(
+        jax.make_jaxpr(lambda x: x + 1.0)(jnp.zeros(4)))
+    b = jaxpr_equiv.canonicalize(
+        jax.make_jaxpr(lambda x: x * 2.0)(jnp.zeros(4)))
+    msg = jaxpr_equiv.diff_canonical("member_a", b, "member_b", a)
+    assert msg is not None
+    assert "'mul' vs 'add'" in msg  # the diverging primitive, by name
+
+
+def test_python_gate_splits_family_like_jx001():
+    # the exact failure mode JX001 exists for: a Python branch on a
+    # config value produces structurally different jaxprs per member
+    def step(gate):
+        return lambda x: (x + 1.0) if gate else x
+
+    on = jaxpr_equiv.canonicalize(jax.make_jaxpr(step(True))(jnp.zeros(4)))
+    off = jaxpr_equiv.canonicalize(jax.make_jaxpr(step(False))(jnp.zeros(4)))
+    assert jaxpr_equiv.diff_canonical("on", on, "off", off) is not None
+
+
+@pytest.mark.slow
+def test_all_ladder_families_one_compile():
+    """The acceptance pin: native 28-member + virt 5-member families
+    are provably one-compile (alpha-equivalent canonical jaxprs)."""
+    reports, findings = jaxpr_equiv.check_all()
+    assert findings == []
+    by = {r.family: r for r in reports}
+    assert by["radix"].n_members == 28
+    assert by["np"].n_members == 5
+    assert all(r.equivalent for r in reports)
+    assert all(r.n_eqns > 0 for r in reports)
+
+
+def test_family_metadata_matches_registry():
+    meta = jaxpr_equiv.family_metadata()
+    assert meta["radix"]["n_members"] == 28
+    assert meta["np"]["n_members"] == 5
+
+
+# ------------------------------------------------- recompile guard
+
+
+def test_count_compiles_names_jit_cache_misses():
+    @jax.jit
+    def fixture_fn(x):
+        return x * 3 + 1
+
+    with recompile.count_compiles() as log:
+        fixture_fn(jnp.zeros(8)).block_until_ready()
+        fixture_fn(jnp.ones(8)).block_until_ready()  # cache hit
+    assert log.count("fixture_fn") == 1
+
+
+def test_recompile_guard_two_member_ladder():
+    findings = recompile.check_ladder_dispatch(
+        members=("np", "victima_virt"), workloads=("rnd", "bc"), n=256)
+    assert findings == []
+
+
+def test_run_ladder_records_one_compile(tmp_path, monkeypatch):
+    from repro.sim import runner
+
+    monkeypatch.setattr(runner, "CACHE_DIR", str(tmp_path))
+    runner.run_ladder("np", members=("np", "victima_virt"),
+                      workloads=("rnd", "bc"), n=128, backend="scan")
+    rec = runner.LADDER_PERF[-1]
+    assert rec["n_members"] == 2
+    assert rec["dispatch_compiles"] <= 1  # warm persistent cache still logs
+    assert rec["one_compile"] is True
+
+
+# ----------------------------------------------------------- CLI
+
+
+def test_cli_exits_zero_on_clean_repo(capsys):
+    # contracts + lint only: the jaxpr pass has its own (slow) pin above
+    rc = analysis_cli.main(["--pass", "contracts,lint", "-q"])
+    assert rc == 0
+    assert capsys.readouterr().out == ""
+
+
+def test_cli_exits_nonzero_on_broken_fixture(capsys, monkeypatch):
+    monkeypatch.setattr(lint, "DEFAULT_FILES",
+                        (FIXTURES / "broken_stage.py",))
+    rc = analysis_cli.main(["--pass", "lint", "-q"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "TH001" in out and "concretizes the tracer" in out
+
+
+def test_cli_rejects_unknown_pass():
+    with pytest.raises(SystemExit):
+        analysis_cli.main(["--pass", "nonsense"])
+
+
+def test_cli_list_passes(capsys):
+    assert analysis_cli.main(["--list"]) == 0
+    out = capsys.readouterr().out
+    for p in ("contracts", "lint", "jaxpr", "recompile"):
+        assert p in out

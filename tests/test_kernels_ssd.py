@@ -63,7 +63,6 @@ def test_ssd_chunked_equals_sequential():
 def test_rglru_scan_equals_loop():
     """Parallel-prefix RG-LRU must equal the sequential recurrence."""
     from repro.models.rglru import rglru_apply, rglru_init, rglru_step
-    import dataclasses
     from repro.configs import get_smoke_config
     cfg = get_smoke_config("recurrentgemma-2b")
     p = rglru_init(jax.random.PRNGKey(0), cfg)

@@ -3,7 +3,6 @@
 The property-based test degrades gracefully: it importorskips
 ``hypothesis`` so the deterministic tests in this file run everywhere.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

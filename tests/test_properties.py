@@ -3,14 +3,14 @@ import pytest
 
 hypothesis = pytest.importorskip("hypothesis")
 
-import hypothesis.strategies as st
-import jax.numpy as jnp
-import numpy as np
-from hypothesis import given, settings
+import hypothesis.strategies as st  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
-from repro.core import assoc, ptwcp
-from repro.core.caches import (BT_DATA, BT_TLB4, l2_insert, l2_lookup,
-                               l2_retag_to_tlb, make_l2)
+from repro.core import assoc, ptwcp  # noqa: E402
+from repro.core.caches import (  # noqa: E402
+    BT_DATA, BT_TLB4, l2_insert, l2_lookup, l2_retag_to_tlb, make_l2)
 
 hypothesis.settings.register_profile(
     "fast", settings(max_examples=25, deadline=None))
@@ -82,7 +82,7 @@ def test_srrip_tlb_aware_reroll(rrpvs, is_tlb):
     tlb = jnp.asarray(is_tlb)
     aged, w = assoc.srrip_victim_tlb_aware(row, val, tlb,
                                            jnp.bool_(True))
-    non_tlb_at_max = np.asarray(tlb == False) & (np.asarray(aged)
+    non_tlb_at_max = ~np.asarray(tlb) & (np.asarray(aged)
                                                  >= assoc.RRIP_MAX)
     if non_tlb_at_max.any():
         assert not bool(tlb[w])

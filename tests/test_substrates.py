@@ -91,7 +91,7 @@ def test_data_prefetch_iterator():
     p = Pipeline(cfg)
     it = p.iterate(0)
     b0 = next(it)
-    b1 = next(it)
+    next(it)
     p.close()
     np.testing.assert_array_equal(b0, p.batch_at(0))
 
