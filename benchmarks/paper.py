@@ -402,13 +402,20 @@ def write_sweep_artifact(path: str | None = None) -> str:
     through the single dispatch graph), ``dispatch_compiles`` (actual
     compile count of that graph, measured via ``jax_log_compiles``)
     and ``one_compile`` (whether the invariant held; the time-shard
-    path re-jits per chunk and records False honestly).  When fills
+    path re-jits per chunk and records False honestly).  New in 5:
+    fills are no longer hand-assembled — ``runner.run_ladder`` derives
+    them from its obs span trace (``obs.report.fill_record``), and two
+    fields ride along: ``trace_gen_true_wall_s`` (producer-side thread
+    time, vs the consumer-side wait ``trace_gen_wall_s``) and
+    ``trace_file`` (the JSONL the record derives from — ``python -m
+    repro.obs report <trace> --check <artifact>`` re-derives every
+    record bit-exactly; schema-4 fields are unchanged).  When fills
     ran under both backends, a scan-vs-pallas speedup line is printed
     so the perf trajectory is visible per PR.
     """
     path = path or os.environ.get("REPRO_BENCH_SWEEP", "BENCH_sweep.json")
     artifact = {
-        "schema": 4,
+        "schema": 5,
         "sim_n": N,
         "devices": jax.local_device_count(),
         "workloads": WLS,

@@ -1,6 +1,6 @@
 """Static-analysis subsystem: the repo's invariants as checkable passes.
 
-Four passes (see ``python -m repro.analysis --list``):
+Five passes (see ``python -m repro.analysis --list``):
 
 - ``contracts`` — stage-contract checker (C00x): signatures, gating
   tables, sized-1-when-off state, Stats fold/surface discipline.
@@ -9,6 +9,10 @@ Four passes (see ``python -m repro.analysis --list``):
 - ``jaxpr`` — jaxpr-equivalence over every discovered ladder family
   (JX00x): proves dyn-gating yields ONE compile, abstract-trace only
   (no device execution).
+- ``obs`` — observability contract (OB001): every BENCH_sweep schema-5
+  field is derivable from a span/counter source the instrumentation
+  actually emits, and ``runner.LADDER_PERF`` records come only from
+  ``obs.report.fill_record`` (no orphan hand-set fields).
 - ``recompile`` — executes a tiny ladder fill and bounds the actual
   ``run_systems`` compile count (RC001).  Runs the simulator, so it is
   opt-in from the CLI and wired into tier-1 via the test suite.
@@ -16,10 +20,11 @@ Four passes (see ``python -m repro.analysis --list``):
 ``run_static()`` is the no-execution subset CI runs before the
 compile-heavy jobs.
 """
-from repro.analysis import contracts, jaxpr_equiv, lint, recompile
+from repro.analysis import (contracts, jaxpr_equiv, lint, obs_contract,
+                            recompile)
 
-PASSES = ("contracts", "lint", "jaxpr", "recompile")
-STATIC_PASSES = ("contracts", "lint", "jaxpr")
+PASSES = ("contracts", "lint", "jaxpr", "obs", "recompile")
+STATIC_PASSES = ("contracts", "lint", "jaxpr", "obs")
 
 
 def run_pass(name: str, progress=None) -> list:
@@ -30,6 +35,8 @@ def run_pass(name: str, progress=None) -> list:
     if name == "jaxpr":
         _, findings = jaxpr_equiv.check_all(progress=progress)
         return findings
+    if name == "obs":
+        return obs_contract.run()
     if name == "recompile":
         return recompile.check_ladder_dispatch()
     raise ValueError(f"unknown analysis pass {name!r} (know {PASSES})")
@@ -44,4 +51,4 @@ def run_static(progress=None) -> list:
 
 
 __all__ = ["PASSES", "STATIC_PASSES", "contracts", "jaxpr_equiv", "lint",
-           "recompile", "run_pass", "run_static"]
+           "obs_contract", "recompile", "run_pass", "run_static"]

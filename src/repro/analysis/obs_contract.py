@@ -1,0 +1,160 @@
+"""OB001: the BENCH_sweep record is fully derivable from the obs trace.
+
+The schema-5 contract (mirroring the C007 orphan-Stats discipline): no
+``LADDER_PERF`` field may be hand-set in ``sim.runner`` — every field
+must flow through ``obs.report.FIELD_SOURCES``, and every source must
+reference something the instrumentation actually emits.  Three checks:
+
+- the ``FIELD_SOURCES`` table and ``SCHEMA5_FIELDS`` are mutually
+  closed (no orphan field, no dangling source), and each source is
+  well-formed: span sums name a declared span, attr sources name an
+  attribute the ``ladder_fill`` span in ``sim/runner.py`` actually sets
+  (``obs.span(...)`` keywords or a later ``fill.set(...)``), derived
+  sources name another field;
+- ``sim/runner.py`` appends to ``LADDER_PERF`` ONLY values produced by
+  ``fill_record`` — a hand-assembled dict literal is exactly the
+  regression this pass exists to block;
+- every name constant declared in ``obs.names`` tuples is unique (a
+  duplicated string would silently merge two metrics).
+
+Pure AST + table inspection: no jax, no execution — part of
+``run_static()``.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from repro.obs import names as obs_names
+from repro.obs import report
+
+RUNNER_PATH = Path(__file__).resolve().parents[1] / "sim" / "runner.py"
+
+_SOURCE_KINDS = ("attr", "sum_span_dur", "count_compiles", "derived",
+                 "trace_path")
+
+
+def _fill_span_attrs(runner_path=None) -> set:
+    """Attribute names the runner's ladder_fill span carries: keywords
+    of the ``obs.span(SPAN_LADDER_FILL, ...)`` call plus every
+    ``fill.set(...)`` keyword."""
+    tree = ast.parse(Path(runner_path or RUNNER_PATH).read_text())
+
+    def _is_fill_span_call(call):
+        return (isinstance(call, ast.Call)
+                and isinstance(call.func, ast.Attribute)
+                and call.func.attr == "span"
+                and call.args
+                and isinstance(call.args[0], ast.Attribute)
+                and call.args[0].attr == "SPAN_LADDER_FILL")
+
+    attrs: set = set()
+    fill_names: set = set()
+    for node in ast.walk(tree):
+        if _is_fill_span_call(node):
+            attrs |= {kw.arg for kw in node.keywords if kw.arg}
+        # `fill = obs.span(SPAN_LADDER_FILL, ...)` -> track fill.set(...)
+        if (isinstance(node, ast.Assign)
+                and _is_fill_span_call(node.value)):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    fill_names.add(t.id)
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "set"
+                and isinstance(node.func.value, ast.Name)
+                and node.func.value.id in fill_names):
+            attrs |= {kw.arg for kw in node.keywords if kw.arg}
+    return attrs
+
+
+def check_field_sources(runner_path=None) -> list:
+    """Table closure + source well-formedness (the core OB001 check)."""
+    findings = []
+    fields = set(report.SCHEMA5_FIELDS)
+    sources = set(report.FIELD_SOURCES)
+    for f in sorted(fields - sources):
+        findings.append(
+            f"OB001 schema-5 field {f!r} has no FIELD_SOURCES entry — "
+            f"it cannot be derived from the trace (orphan hand-set "
+            f"field)")
+    for f in sorted(sources - fields):
+        findings.append(
+            f"OB001 FIELD_SOURCES entry {f!r} is not a schema-5 field "
+            f"(dangling source)")
+
+    span_attrs = _fill_span_attrs(runner_path)
+    for f in sorted(fields & sources):
+        kind, arg = report.FIELD_SOURCES[f]
+        if kind not in _SOURCE_KINDS:
+            findings.append(
+                f"OB001 field {f!r}: unknown source kind {kind!r} "
+                f"(know {_SOURCE_KINDS})")
+        elif kind == "sum_span_dur" and arg not in obs_names.SPAN_NAMES:
+            findings.append(
+                f"OB001 field {f!r} sums spans named {arg!r}, which is "
+                f"not declared in obs.names.SPAN_NAMES — nothing emits "
+                f"it")
+        elif kind == "attr" and arg not in span_attrs:
+            findings.append(
+                f"OB001 field {f!r} reads ladder_fill attr {arg!r}, but "
+                f"sim/runner.py never sets it on the fill span "
+                f"(sets: {sorted(span_attrs)})")
+        elif kind == "count_compiles" and arg not in span_attrs:
+            findings.append(
+                f"OB001 field {f!r} filters compile events by fill attr "
+                f"{arg!r}, which the fill span never sets")
+        elif kind == "derived" and arg not in sources:
+            findings.append(
+                f"OB001 field {f!r} derives from {arg!r}, which has no "
+                f"FIELD_SOURCES entry")
+    return findings
+
+
+def check_runner_appends(runner_path=None) -> list:
+    """``LADDER_PERF.append(...)`` must receive a ``fill_record`` call."""
+    tree = ast.parse(Path(runner_path or RUNNER_PATH).read_text())
+    findings = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "append"
+                and isinstance(node.func.value, ast.Name)
+                and node.func.value.id == "LADDER_PERF"):
+            continue
+        arg = node.args[0] if node.args else None
+        ok = (isinstance(arg, ast.Call)
+              and isinstance(arg.func, ast.Attribute)
+              and arg.func.attr == "fill_record")
+        if not ok:
+            findings.append(
+                f"OB001 sim/runner.py:{node.lineno}: LADDER_PERF.append "
+                f"receives a hand-assembled value; records must come "
+                f"from obs.report.fill_record so the artifact stays "
+                f"derivable from the trace")
+    return findings
+
+
+def check_name_uniqueness() -> list:
+    """Declared span/event/metric names must be globally unique."""
+    findings = []
+    all_names: list = []
+    for tup in (obs_names.SPAN_NAMES, obs_names.EVENT_NAMES,
+                obs_names.COUNTER_NAMES, obs_names.GAUGE_NAMES,
+                obs_names.HIST_NAMES):
+        all_names += list(tup)
+    seen: set = set()
+    for n in all_names:
+        if n in seen:
+            findings.append(
+                f"OB001 obs.names declares {n!r} more than once — "
+                f"distinct metrics would silently merge")
+        seen.add(n)
+    return findings
+
+
+def run(runner_path=None) -> list:
+    return (check_field_sources(runner_path)
+            + check_runner_appends(runner_path)
+            + check_name_uniqueness())

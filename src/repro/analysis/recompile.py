@@ -57,9 +57,10 @@ class CompileLog:
 
 
 class _Capture(logging.Handler):
-    def __init__(self, log: CompileLog):
+    def __init__(self, log: CompileLog, on_compile=None):
         super().__init__(level=logging.DEBUG)
         self._log = log
+        self._on_compile = on_compile
 
     def emit(self, record: logging.LogRecord) -> None:
         msg = record.getMessage()
@@ -68,21 +69,28 @@ class _Capture(logging.Handler):
             # "Compiling <name> (<id>) for with global shapes ..."
             name = msg[len(_PREFIX):].split()[0]
             self._log.names.append(name)
+            if self._on_compile is not None:
+                try:
+                    self._on_compile(name)
+                except Exception:  # telemetry must never kill a compile
+                    pass
 
 
 @contextmanager
-def count_compiles():
+def count_compiles(on_compile=None):
     """Context manager yielding a :class:`CompileLog` of jit-cache misses.
 
     Temporarily enables ``jax_log_compiles`` and attaches a capturing
     handler to jax's compile loggers with propagation off (so user
     terminals are not spammed with WARNING records); both are restored
     on exit.  Nesting is safe — each level sees every compile inside it.
+    ``on_compile(name)``, if given, fires per captured compile — the hook
+    ``sim.runner`` uses to land every jit-cache miss in the obs trace.
     """
     import jax  # deferred: keep module importable without initializing jax
 
     log = CompileLog()
-    handler = _Capture(log)
+    handler = _Capture(log, on_compile)
     prev_flag = jax.config.jax_log_compiles
     loggers = [logging.getLogger(n) for n in _JAX_COMPILE_LOGGERS]
     prev = [(lg.level, lg.propagate) for lg in loggers]

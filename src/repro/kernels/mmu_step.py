@@ -34,6 +34,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+import repro.obs as obs
+
 def _interpret_default() -> bool:
     # computed lazily, NOT at import time: querying the backend here
     # would initialize jax before sweep.py's --devices flag can set
@@ -215,6 +217,12 @@ def blocked_scan(step, st0, trace, consts=None, block: int | None = None,
     const_leaves, const_def = jax.tree.flatten(consts_all)
     n = tr_leaves[0].shape[0]
     blk = pick_block(n, block)
+    # trace-time telemetry (static Python ints only — safe under any
+    # transform): one event per kernel BUILD, i.e. per lowering, not per
+    # execution, which is exactly the compile-cost signal TPU phase-2
+    # block tuning needs
+    obs.event(obs.names.EV_PALLAS_KERNEL, n=n, block=blk,
+              grid=n // blk, interpret=bool(interpret))
     return _blocked_scan_impl(
         step_k, (st_def, tr_def, const_def), blk, interpret,
         (len(tr_leaves), len(st_leaves)),

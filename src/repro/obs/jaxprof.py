@@ -1,0 +1,59 @@
+"""Optional jax.profiler passthrough + device-memory events.
+
+The span trace answers "where did the wall time go" at pipeline
+granularity; for kernel-level truth on the TPU phase-2 runs you want
+jax's own profiler.  :func:`maybe_profile` wraps a block in
+``jax.profiler.trace(logdir)`` when a log dir is configured
+(``REPRO_OBS_JAXPROF`` or an explicit argument) and is a no-op
+otherwise — the sweep pipeline calls it unconditionally.
+:func:`device_memory_event` snapshots ``Device.memory_stats()`` into an
+``device_memory`` trace event where the backend exposes it (TPU/GPU;
+CPU returns None and emits nothing).
+
+jax imports are deferred so ``repro.obs`` stays importable — and its
+CLI usable on raw JSONL files — without initializing jax.
+"""
+from __future__ import annotations
+
+import os
+from contextlib import contextmanager
+
+
+def profiler_logdir(logdir: str | None = None) -> str | None:
+    return logdir or os.environ.get("REPRO_OBS_JAXPROF", "").strip() or None
+
+
+@contextmanager
+def maybe_profile(logdir: str | None = None):
+    """``jax.profiler.trace(logdir)`` when configured, else a no-op."""
+    logdir = profiler_logdir(logdir)
+    if not logdir:
+        yield None
+        return
+    import jax
+
+    with jax.profiler.trace(logdir):
+        yield logdir
+
+
+def device_memory_event(emit, parent=None):
+    """Emit one ``device_memory`` event via `emit` (an ``obs.event``-shaped
+    callable) with per-device ``memory_stats()``; returns the stats dict
+    or None when no device reports any (CPU backend)."""
+    import jax
+
+    stats = {}
+    for d in jax.local_devices():
+        try:
+            s = d.memory_stats()
+        except Exception:
+            s = None
+        if s:
+            stats[str(d.id)] = {k: int(v) for k, v in s.items()
+                                if isinstance(v, (int, float))}
+    if not stats:
+        return None
+    from repro.obs import names
+
+    emit(names.EV_DEVICE_MEMORY, parent=parent, devices=stats)
+    return stats

@@ -179,12 +179,53 @@ def translate_batch(vtc: VTC, bt: btab.BlockTables, reqs, blocks, pressure):
     return vtc, bt, phys, src
 
 
+def _shootdown_masks(vtc: VTC, req):
+    tmask = (vtc.tc_tags >> 20) == req
+    cmask = (vtc.cl_tags >> 17) == req  # ckey = key>>3 ⇒ req bits at 17
+    return tmask, cmask
+
+
+def invalidation_counts(vtc: VTC, req):
+    """How many live entries a shootdown of `req` would invalidate.
+
+    Returns ``(n_tc, n_cluster)`` as int32 scalars (tracers under jit) —
+    the serving engine feeds these to the ``serve.vtc.invalidate``
+    counter, host-side only.
+    """
+    tmask, cmask = _shootdown_masks(vtc, req)
+    return (jnp.sum((vtc.tc_valid & tmask).astype(jnp.int32)),
+            jnp.sum((vtc.cl_valid & cmask).astype(jnp.int32)))
+
+
 def invalidate_request(vtc: VTC, req) -> VTC:
     """Shootdown flow (paper §6): request eviction invalidates its TC
     entries and cluster pages by tag match on the request id."""
-    tmask = (vtc.tc_tags >> 20) == req
-    cmask = (vtc.cl_tags >> 17) == req  # ckey = key>>3 ⇒ req bits at 17
+    tmask, cmask = _shootdown_masks(vtc, req)
     return vtc._replace(
         tc_valid=vtc.tc_valid & ~tmask,
         cl_valid=vtc.cl_valid & ~cmask,
     )
+
+
+def stats(vtc: VTC) -> dict:
+    """Host-side counter snapshot (plain ints/floats, safe to serialize).
+
+    ``vtc_hit_rate`` is the paper's translation-reach headline for the
+    serving tiers: the fraction of translations served WITHOUT a radix
+    walk (TC hits + cluster hits).
+    """
+    hit_tc = int(vtc.n_hit_tc)
+    hit_cl = int(vtc.n_hit_cluster)
+    walks = int(vtc.n_walk)
+    tot = max(hit_tc + hit_cl + walks, 1)
+    return {
+        "n_hit_tc": hit_tc,
+        "n_hit_cluster": hit_cl,
+        "n_walk": walks,
+        "tc_hit_rate": hit_tc / tot,
+        "cluster_hit_rate": hit_cl / tot,
+        "walk_rate": walks / tot,
+        "vtc_hit_rate": (hit_tc + hit_cl) / tot,
+        "tc_occupancy": float(jnp.mean(vtc.tc_valid.astype(jnp.float32))),
+        "cl_occupancy": float(jnp.mean(vtc.cl_valid.astype(jnp.float32))),
+    }

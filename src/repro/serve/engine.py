@@ -16,11 +16,13 @@ translated tables.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+import repro.obs as obs
 from repro.paged import block_table as btab
 from repro.paged import translation_cache as vtc_mod
 
@@ -83,6 +85,10 @@ def retire(st: EngineState, slot: int) -> EngineState:
     free = st.page_free.at[jnp.maximum(pages, 0).reshape(-1)].max(
         pmask.reshape(-1).astype(jnp.int32))
     bt = btab.unmap_request(st.bt, jnp.int32(slot))
+    n_tc, n_cl = vtc_mod.invalidation_counts(st.vtc, jnp.int32(slot))
+    # tracer-safe: under jit these counts are tracers and the registry
+    # skips the bump — host-path retires (the scheduler loop) do count
+    obs.count(obs.names.CTR_VTC_INVALIDATE, n_tc + n_cl)
     vtc = vtc_mod.invalidate_request(st.vtc, jnp.int32(slot))
     return st._replace(
         bt=bt, vtc=vtc, page_free=free,
@@ -128,12 +134,52 @@ def decode_translate(st: EngineState, cfg: EngineConfig):
     return st, phys, src
 
 
+def decode_step(st: EngineState, cfg: EngineConfig, fn=None):
+    """One TIMED decode tick: the instrumented serving entry point.
+
+    Runs ``fn(state)`` (default: ``decode_translate`` under this `cfg`;
+    pass a jitted closure for hot loops) inside a ``serve.decode_step``
+    span, blocks on the results so the measured latency is real device
+    time, and feeds the obs registry: the decode-step latency histogram
+    and the step counter the serving load harness will report from.
+    """
+    if fn is None:
+        fn = lambda s: decode_translate(s, cfg)  # noqa: E731
+    with obs.span(obs.names.SPAN_DECODE_STEP):
+        t0 = time.perf_counter()
+        out = fn(st)
+        jax.block_until_ready(out)
+        obs.observe(obs.names.HIST_DECODE_STEP_S,
+                    time.perf_counter() - t0)
+    obs.count(obs.names.CTR_DECODE_STEPS)
+    return out
+
+
 def stats(st: EngineState) -> dict:
-    v = st.vtc
-    tot = max(int(v.n_hit_tc + v.n_hit_cluster + v.n_walk), 1)
+    """Engine-level snapshot, routed through the obs registry.
+
+    VTC counters live in device state (cumulative across the request's
+    jitted steps), so sampling here raises the registry counters
+    monotonically (``inc_to``) rather than double-counting; pool/slot
+    occupancy land as gauges.  Keys extend the legacy dict with the
+    paper-facing ``vtc_hit_rate`` (walk-free translation fraction) and
+    ``invalidate_count`` (shootdown work observed by ``retire``).
+    """
+    v = vtc_mod.stats(st.vtc)
+    pages_free = int(jnp.sum(st.page_free))
+    slot_occ = float(jnp.mean(st.slot_live.astype(jnp.float32)))
+    obs.REGISTRY.inc_to(obs.names.CTR_VTC_HIT_TC, v["n_hit_tc"])
+    obs.REGISTRY.inc_to(obs.names.CTR_VTC_HIT_CLUSTER, v["n_hit_cluster"])
+    obs.REGISTRY.inc_to(obs.names.CTR_VTC_WALK, v["n_walk"])
+    obs.gauge(obs.names.GAUGE_PAGES_FREE, pages_free)
+    obs.gauge(obs.names.GAUGE_SLOT_OCCUPANCY, slot_occ)
     return {
-        "tc_hit_rate": float(v.n_hit_tc) / tot,
-        "cluster_hit_rate": float(v.n_hit_cluster) / tot,
-        "walk_rate": float(v.n_walk) / tot,
-        "pages_free": int(jnp.sum(st.page_free)),
+        "tc_hit_rate": v["tc_hit_rate"],
+        "cluster_hit_rate": v["cluster_hit_rate"],
+        "walk_rate": v["walk_rate"],
+        "vtc_hit_rate": v["vtc_hit_rate"],
+        "pages_free": pages_free,
+        "slot_occupancy": slot_occ,
+        "invalidate_count": obs.REGISTRY.counter(
+            obs.names.CTR_VTC_INVALIDATE),
     }

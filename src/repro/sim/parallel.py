@@ -25,6 +25,8 @@ and the multidev CI job).
 This module deliberately imports nothing from ``repro.core`` or its
 ``repro.sim`` siblings — it is a pure pytree/mesh utility, so the core
 layer (``mmu.simulate_systems``) may import it without a cycle.
+(``repro.obs`` is a stdlib-only leaf below even this layer, so emitting
+trace events is cycle-safe.)
 """
 from __future__ import annotations
 
@@ -36,6 +38,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+import repro.obs as obs
 
 try:  # jax >= 0.6 promotes shard_map out of experimental
     from jax import shard_map  # type: ignore[attr-defined]
@@ -271,6 +275,9 @@ def time_shard_scan(block_fn, st0, trace, t_shards: int,
         while known < t and eq[known]:
             known += 1
         starts = new_starts
+        # per-round hand-off telemetry: how far the exact prefix grew
+        obs.event(obs.names.EV_TIME_SHARD_ROUND, round=rounds,
+                  known_prefix=int(known), t_shards=t)
     final = jax.tree.map(lambda e: e[-1], ends)
     return final, {"t_shards": t, "rounds": rounds,
                    "requested": int(t_shards)}

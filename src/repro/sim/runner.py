@@ -19,7 +19,6 @@ import math
 import os
 import pickle
 import tempfile
-import time
 from concurrent.futures import ThreadPoolExecutor
 
 import jax
@@ -33,11 +32,13 @@ jax.config.update("jax_persistent_cache_min_compile_time_secs", 5)
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
+import repro.obs as obs  # noqa: E402
 from repro.analysis import recompile  # noqa: E402
 from repro.core import mmu  # noqa: E402
 from repro.core.mmu import (  # noqa: E402
     make_systems_runner, simulate, simulate_batch)
 from repro.kernels import mmu_step  # noqa: E402
+from repro.obs import jaxprof  # noqa: E402
 from repro.sim import parallel, systems, trace_gen  # noqa: E402
 
 CACHE_DIR = os.environ.get("REPRO_SIM_CACHE", "/root/repo/.sim_cache")
@@ -61,13 +62,18 @@ CHUNK_MAX = int(os.environ.get("REPRO_SIM_CHUNK_MAX", 8))
 GEN_WORKERS = int(os.environ.get("REPRO_GEN_WORKERS", 4))
 
 # perf-trajectory records: one entry per batched ladder fill this process
-# ran, with the pipeline stages split out (trace_gen_wall_s = generation
-# time NOT hidden behind simulation; compile_plus_sim_wall_s = the
-# compiled shard_map calls) plus devices/mesh metadata and — since
-# schema 3 — the access-loop backend, pallas block size, time-shard
-# count/rounds and whether the chunk was auto-tuned.  benchmarks/
-# paper.write_sweep_artifact dumps them to BENCH_sweep.json so CI can
-# track sweep-throughput regressions across PRs.
+# ran.  Since schema 5 these are NOT hand-assembled: every fill runs
+# under a ``ladder_fill`` obs span tree (trace_gen / chunk_wait /
+# dispatch children, xla_compile events) and the record is DERIVED from
+# the tracer's events by ``obs.report.fill_record`` — the same function
+# ``python -m repro.obs report`` applies to the JSONL file, so the
+# artifact is reconstructible bit-exactly offline (and ``--check``
+# proves it).  Field meanings: trace_gen_wall_s = consumer-side wait
+# (generation NOT hidden behind simulation), trace_gen_true_wall_s =
+# producer-side thread time, compile_plus_sim_wall_s = the compiled
+# shard_map dispatches; see obs.report.FIELD_SOURCES for the full
+# field->source table.  benchmarks/paper.write_sweep_artifact dumps
+# them to BENCH_sweep.json so CI can track sweep-throughput regressions.
 LADDER_PERF: list[dict] = []
 
 
@@ -164,6 +170,7 @@ def _store(path: str, result) -> None:
         with os.fdopen(fd, "wb") as f:
             pickle.dump(result, f)
         os.replace(tmp, path)
+        obs.count(obs.names.CTR_SIM_CACHE_STORE, emit=True)
     except BaseException:
         if os.path.exists(tmp):
             os.unlink(tmp)
@@ -185,7 +192,14 @@ def _load(path: str):
 
 
 def _cached(path: str, cache: bool):
-    return _load(path) if cache and os.path.exists(path) else None
+    if not cache:
+        return None
+    got = _load(path) if os.path.exists(path) else None
+    # unreadable entries already count as missing in _load; mirror that
+    # split into the obs registry (hit = a usable entry came back)
+    obs.count(obs.names.CTR_SIM_CACHE_HIT if got is not None
+              else obs.names.CTR_SIM_CACHE_MISS, emit=True)
+    return got
 
 
 def _np_stats(st):
@@ -312,60 +326,70 @@ def run_ladder(ladder: str, workloads=None, n: int = 150_000,
     # [S, chunk] shape, so the shard_map kernel traces/compiles once
     run_fn = make_systems_runner(cfg, plan, backend=backend, block=block,
                                  time_shards=time_shards)
-    t_gen = t_sim = 0.0
     n_chunks = 0
-    with recompile.count_compiles() as clog, ThreadPoolExecutor(
-            max_workers=min(len(missing), GEN_WORKERS)) as pool:
-        futs = {w: pool.submit(trace_gen.generate, w, n=n, seed=seed)
-                for w in missing}
-        for lo in range(0, len(missing), chunk):
-            group = missing[lo:lo + chunk]
-            t0 = time.time()
-            gens = [futs[w].result() for w in group]
-            t_gen += time.time() - t0  # generation NOT hidden behind sim
-            # pad the workload axis to the fixed chunk width: padded
-            # lanes re-simulate the last workload and are never stored
-            padded = gens + [gens[-1]] * (chunk - len(gens))
-            t0 = time.time()
-            # the base composition may contain dyn-gated stages some
-            # members lack (radix lanes riding a victima ladder):
-            # the runner derives the stages from cfg
-            per, extras = run_fn(dyns, _stack_traces(padded, n))
-            t_sim += time.time() - t0
-            n_chunks += 1
-            for si, s in enumerate(members):
-                for wi, (w, g) in enumerate(zip(group, gens)):
-                    if w in out[s]:
-                        continue  # pre-existing cell: keep cached bytes
-                    result = (_np_stats(per[si][wi]), extras[si][wi],
-                              g["spec"])
-                    _store(_path(s, w, n, seed, None), result)
-                    out[s][w] = result
-    tinfo = getattr(run_fn, "last_time_shard_info", None)
-    # one-compile accounting (schema 4): the dispatch graph must compile
-    # once for the whole fill.  The time-shard path re-jits its per-round
-    # function every dispatch (a known per-chunk retrace), so its count
-    # is per-chunk — recorded honestly, not masked.
-    dispatch_name = (recompile.DISPATCH_NAME if time_shards <= 1
-                     else "round_fn")
-    dispatch_compiles = clog.count(dispatch_name)
-    LADDER_PERF.append({
-        "ladder": ladder, "n_systems": len(members),
-        "n_members": len(members),
-        "n_workloads": len(missing), "sim_n": n,
-        "dispatch_compiles": dispatch_compiles,
-        "one_compile": dispatch_compiles <= 1,
-        "devices": jax.local_device_count(),
-        "mesh": [plan.sys_dim, plan.wl_dim],
-        "chunk": chunk, "chunk_auto": auto, "n_chunks": n_chunks,
-        "backend": backend,
-        "block": (mmu_step.pick_block(n, block)
-                  if backend == "pallas" else None),
-        "t_shards": tinfo["t_shards"] if tinfo else 1,
-        "t_rounds": tinfo["rounds"] if tinfo else None,
-        "trace_gen_wall_s": round(t_gen, 3),
-        "compile_plus_sim_wall_s": round(t_sim, 3),
-    })
+    # one-compile accounting (schema >= 4): the dispatch graph must
+    # compile once for the whole fill.  The time-shard path re-jits its
+    # per-round function every dispatch (a known per-chunk retrace), so
+    # its count is per-chunk — recorded honestly, not masked.
+    dispatch_fn = (recompile.DISPATCH_NAME if time_shards <= 1
+                   else "round_fn")
+    tr = obs.tracer()
+    fill = obs.span(
+        obs.names.SPAN_LADDER_FILL,
+        ladder=ladder, n_systems=len(members), n_members=len(members),
+        n_workloads=len(missing), sim_n=n,
+        devices=jax.local_device_count(),
+        mesh=[plan.sys_dim, plan.wl_dim],
+        chunk=chunk, chunk_auto=auto, backend=backend,
+        block=(mmu_step.pick_block(n, block)
+               if backend == "pallas" else None),
+        dispatch_fn=dispatch_fn)
+
+    def _gen(w):
+        # producer-side TRUE generation time: runs on a pool worker
+        # thread, so the fill parent must be attached explicitly
+        with obs.span(obs.names.SPAN_TRACE_GEN, parent=fill, wl=w):
+            return trace_gen.generate(w, n=n, seed=seed)
+
+    with fill:
+        with jaxprof.maybe_profile(), recompile.count_compiles(
+                on_compile=lambda name: obs.event(
+                    obs.names.EV_COMPILE, parent=fill, fn=name)), \
+                ThreadPoolExecutor(
+                    max_workers=min(len(missing), GEN_WORKERS)) as pool:
+            futs = {w: pool.submit(_gen, w) for w in missing}
+            for lo in range(0, len(missing), chunk):
+                group = missing[lo:lo + chunk]
+                # consumer-side wait: generation NOT hidden behind sim
+                with obs.span(obs.names.SPAN_CHUNK_WAIT,
+                              workloads=list(group)):
+                    gens = [futs[w].result() for w in group]
+                # pad the workload axis to the fixed chunk width: padded
+                # lanes re-simulate the last workload and are never stored
+                padded = gens + [gens[-1]] * (chunk - len(gens))
+                # the base composition may contain dyn-gated stages some
+                # members lack (radix lanes riding a victima ladder):
+                # the runner derives the stages from cfg
+                with obs.span(obs.names.SPAN_DISPATCH,
+                              chunk_index=n_chunks, workloads=list(group)):
+                    per, extras = run_fn(dyns, _stack_traces(padded, n))
+                n_chunks += 1
+                for si, s in enumerate(members):
+                    for wi, (w, g) in enumerate(zip(group, gens)):
+                        if w in out[s]:
+                            continue  # pre-existing cell: keep cached bytes
+                        result = (_np_stats(per[si][wi]), extras[si][wi],
+                                  g["spec"])
+                        _store(_path(s, w, n, seed, None), result)
+                        out[s][w] = result
+        tinfo = getattr(run_fn, "last_time_shard_info", None)
+        fill.set(n_chunks=n_chunks,
+                 t_shards=tinfo["t_shards"] if tinfo else 1,
+                 t_rounds=tinfo["rounds"] if tinfo else None)
+        jaxprof.device_memory_event(obs.event)  # no-op on CPU backends
+    # the record is DERIVED from the just-closed span tree by the same
+    # function the offline CLI uses — see the LADDER_PERF comment above
+    LADDER_PERF.append(obs.report.fill_record(tr.events, fill.id, tr.path))
     return out
 
 

@@ -28,6 +28,12 @@ implementation (bit-identical results; pallas runs in interpreter mode
 off-TPU) and ``--time-shards N`` splits each trace's time axis into N
 speculative blocks resolved to the exact serial carry — it needs a 1x1
 ("sys", "wl") mesh, so it conflicts with ``--mesh`` unless that is 1x1.
+
+Observability: ``--obs-trace PATH`` points the process-global obs
+tracer at PATH, so every ladder fill's span tree lands in that JSONL
+file (``python -m repro.obs report PATH`` rolls it up; equivalent to
+``REPRO_OBS_TRACE=PATH``, which also covers non-sweep entry points like
+``benchmarks/run.py``).
 """
 from __future__ import annotations
 
@@ -35,6 +41,7 @@ import os
 import sys
 import time
 
+import repro.obs as obs
 from repro.core import mmu
 from repro.sim import systems
 from repro.sim.runner import run_batch, run_ladder
@@ -128,9 +135,12 @@ def parse_args(args):
             raise SystemExit(f"{flag} wants a positive integer, got {val!r}")
         return int(val)
 
+    def _obs_trace(val, flag):
+        return _value(val, flag, "a file path")
+
     names, tags = [], []
     opts = {"mesh": None, "devices": None, "backend": None,
-            "time_shards": 1}
+            "time_shards": 1, "obs_trace": None}
     it = iter(args or [])
     for a in it:
         if a == "--tags":
@@ -156,10 +166,15 @@ def parse_args(args):
         elif a.startswith("--time-shards="):
             opts["time_shards"] = _tshards(a.split("=", 1)[1],
                                            "--time-shards=")
+        elif a == "--obs-trace":
+            opts["obs_trace"] = _obs_trace(next(it, None), "--obs-trace")
+        elif a.startswith("--obs-trace="):
+            opts["obs_trace"] = _obs_trace(a.split("=", 1)[1],
+                                           "--obs-trace=")
         elif a.startswith("-"):
             raise SystemExit(
                 f"unknown option {a!r} (only --tags/--mesh/--devices/"
-                f"--backend/--time-shards)")
+                f"--backend/--time-shards/--obs-trace)")
         else:
             names.append(a)
     if opts["time_shards"] > 1 and opts["mesh"] not in (None, (1, 1)):
@@ -172,6 +187,8 @@ def parse_args(args):
 
 def main(selected=None):
     selected, tags, opts = parse_args(selected)
+    if opts["obs_trace"]:
+        obs.configure(opts["obs_trace"])
     if opts["devices"]:
         # mesh debugging: force N virtual CPU devices.  This only works
         # BEFORE the first jax device query initializes the backend —

@@ -353,7 +353,8 @@ def test_sweep_rejects_unknown_systems_before_simulating():
         sweep.main(["radix", "definitely_not_a_system"])
 
 
-_NO_OPTS = {"mesh": None, "devices": None, "backend": None, "time_shards": 1}
+_NO_OPTS = {"mesh": None, "devices": None, "backend": None, "time_shards": 1,
+            "obs_trace": None}
 
 
 def test_sweep_parse_args_accepts_both_tag_forms():

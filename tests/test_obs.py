@@ -1,0 +1,458 @@
+"""Tests for the ``repro.obs`` tracing/metrics layer.
+
+Covers the tentpole contracts: span nesting (implicit thread-local +
+explicit cross-thread parents, the ``run_ladder`` producer-pool shape),
+JSONL file <-> in-memory bit-exactness, the schema-5 round trip
+(``LADDER_PERF`` records reproduce offline from the raw trace), tracer
+overhead bounds, the metrics registry's tracer-safety under jit, the
+serve-path counters, the report/diff CLI, and the OB001 analyzer pass.
+"""
+from __future__ import annotations
+
+import json
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.obs as obs
+from repro.obs import names, report
+from repro.obs.registry import Registry, host_value
+from repro.obs.tracer import Tracer
+
+
+@pytest.fixture
+def tr(tmp_path):
+    """A fresh PROCESS-GLOBAL tracer on a temp file (restored after)."""
+    t = obs.configure(str(tmp_path / "trace.jsonl"))
+    yield t
+    obs.configure()  # later tests get the default path back
+
+
+# ------------------------------------------------------------ tracer
+
+
+def test_span_nesting_implicit_parent(tr):
+    with tr.span("outer") as outer:
+        with tr.span("inner") as inner:
+            assert tr.current() is inner
+        assert tr.current() is outer
+    assert tr.current() is None
+    recs = {e["name"]: e for e in tr.events}
+    assert recs["inner"]["parent"] == recs["outer"]["id"]
+    assert recs["outer"]["parent"] is None
+    # children close (and emit) before parents
+    assert tr.events.index(recs["inner"]) < tr.events.index(recs["outer"])
+
+
+def test_span_explicit_parent_crosses_threads(tr):
+    """The run_ladder shape: worker-thread spans attach to the fill."""
+    with tr.span("fill") as fill:
+        def work(i):
+            # implicit stack is thread-local: without parent= this span
+            # would be a root, not a fill child
+            with tr.span("gen", parent=fill, wl=i):
+                pass
+        threads = [threading.Thread(target=work, args=(i,))
+                   for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    gens = [e for e in tr.events if e["name"] == "gen"]
+    assert len(gens) == 8
+    assert all(e["parent"] == fill.id for e in gens)
+    assert sorted(e["attrs"]["wl"] for e in gens) == list(range(8))
+    # ids are unique under concurrency
+    ids = [e["id"] for e in tr.events]
+    assert len(ids) == len(set(ids))
+
+
+def test_worker_root_span_does_not_leak_across_threads(tr):
+    seen = {}
+
+    def work():
+        seen["current"] = tr.current()
+    with tr.span("outer"):
+        t = threading.Thread(target=work)
+        t.start()
+        t.join()
+    assert seen["current"] is None  # implicit parent never crosses threads
+
+
+def test_attrs_sanitized_at_emission(tr):
+    with tr.span("s", np_scalar=np.int64(7), jnp_scalar=jnp.float32(1.5),
+                 arr=np.arange(3), nested={"k": (1, 2)}):
+        pass
+    a = tr.events[-1]["attrs"]
+    assert a["np_scalar"] == 7 and isinstance(a["np_scalar"], int)
+    assert a["jnp_scalar"] == 1.5 and isinstance(a["jnp_scalar"], float)
+    assert a["arr"] == [0, 1, 2]
+    assert a["nested"] == {"k": [1, 2]}
+    # the whole record JSON round-trips exactly
+    assert json.loads(json.dumps(tr.events[-1])) == tr.events[-1]
+
+
+def test_jsonl_file_matches_memory_bit_exact(tr):
+    with tr.span("fill", x=1.234567891234):
+        tr.event("ev", v=np.float64(0.1))
+        tr.count("ctr", 3)
+    tr.flush()
+    assert report.read_trace(tr.path) == tr.events
+
+
+def test_span_error_flag(tr):
+    with pytest.raises(RuntimeError):
+        with tr.span("boom"):
+            raise RuntimeError("x")
+    assert tr.events[-1]["error"] is True
+
+
+def test_tracer_lazy_file_creation(tmp_path):
+    t = Tracer(str(tmp_path / "sub" / "t.jsonl"))
+    assert not (tmp_path / "sub").exists()  # import/construct: no I/O
+    t.event("e")
+    assert (tmp_path / "sub" / "t.jsonl").exists()
+    meta = report.read_trace(t.path)  # meta line is stripped
+    assert len(meta) == 1 and meta[0]["name"] == "e"
+    t.close()
+
+
+# ---------------------------------------------------------- registry
+
+
+def test_registry_counters_gauges_hists():
+    r = Registry()
+    r.inc("c")
+    r.inc("c", 2)
+    r.gauge("g", 0.5)
+    for v in (1.0, 2.0, 3.0, 4.0):
+        r.observe("h", v)
+    snap = r.snapshot()
+    assert snap["counters"]["c"] == 3
+    assert snap["gauges"]["g"] == 0.5
+    h = snap["hists"]["h"]
+    assert h["count"] == 4 and h["min"] == 1.0 and h["max"] == 4.0
+    assert h["mean"] == 2.5 and h["p50"] == 3.0
+    r.reset()
+    assert r.snapshot() == {"counters": {}, "gauges": {}, "hists": {}}
+
+
+def test_registry_inc_to_monotone():
+    r = Registry()
+    assert r.inc_to("c", 5) == 5
+    r.inc_to("c", 3)  # never decreases
+    assert r.counter("c") == 5
+    r.inc_to("c", 9)
+    assert r.counter("c") == 9
+
+
+def test_host_value_tracer_safe():
+    assert host_value(3) == 3
+    assert host_value(jnp.int32(4)) == 4
+    assert isinstance(host_value(jnp.int32(4)), int)
+    assert host_value(np.float32(0.5)) == 0.5
+    got = []
+
+    @jax.jit
+    def f(x):
+        got.append(host_value(x))  # tracer: must be None, not crash
+        return x + 1
+    f(jnp.int32(1))
+    assert got == [None]
+
+
+def test_obs_count_skips_tracers(tr):
+    obs.REGISTRY.reset()
+
+    @jax.jit
+    def f(x):
+        obs.count("t.ctr", x)
+        return x
+    f(jnp.int32(5))
+    assert obs.REGISTRY.counter("t.ctr") == 0
+    obs.count("t.ctr", jnp.int32(5))
+    assert obs.REGISTRY.counter("t.ctr") == 5
+
+
+# --------------------------------------------- run_ladder round trip
+
+
+@pytest.fixture(scope="module")
+def ladder_fill(tmp_path_factory):
+    """ONE instrumented tiny-N fill shared by the round-trip tests (the
+    ladder compile is the expensive part; every test reads the same
+    record + trace)."""
+    from repro.sim import runner
+
+    mp = pytest.MonkeyPatch()
+    base = tmp_path_factory.mktemp("obs_fill")
+    t = obs.configure(str(base / "trace.jsonl"))
+    mp.setattr(runner, "CACHE_DIR", str(base / "cache"))
+    before = len(runner.LADDER_PERF)
+    over0 = obs.overhead_s()
+    runner.run_ladder("np", members=("np", "victima_virt"),
+                      workloads=("rnd", "bc"), n=128, backend="scan")
+    rec = runner.LADDER_PERF[-1]
+    assert len(runner.LADDER_PERF) == before + 1
+    yield {"rec": rec, "tr": t, "overhead": obs.overhead_s() - over0}
+    mp.undo()
+    obs.configure()
+
+
+def test_run_ladder_record_schema5(ladder_fill):
+    rec = ladder_fill["rec"]
+    assert set(rec) == set(report.SCHEMA5_FIELDS)
+    assert rec["ladder"] == "np" and rec["n_members"] == 2
+    assert rec["n_workloads"] == 2 and rec["sim_n"] == 128
+    assert rec["one_compile"] is True
+    assert rec["trace_file"] == ladder_fill["tr"].path
+    assert rec["compile_plus_sim_wall_s"] > 0
+    # producer-side truth exists independently of the consumer-side wait
+    assert rec["trace_gen_true_wall_s"] >= 0
+
+
+def test_run_ladder_round_trip_bit_exact(ladder_fill):
+    """The acceptance criterion: `report` on the JSONL reproduces the
+    LADDER_PERF record exactly — including every schema-4 field."""
+    tr = ladder_fill["tr"]
+    tr.flush()
+    events = report.read_trace(tr.path)
+    offline = report.ladder_records(events, trace_file=tr.path)
+    assert offline[-1] == ladder_fill["rec"]
+    # and the trace carries the full span taxonomy for the fill
+    by_name = {}
+    for e in events:
+        by_name.setdefault(e["name"], []).append(e)
+    fill = by_name[names.SPAN_LADDER_FILL][-1]
+    for n in (names.SPAN_TRACE_GEN, names.SPAN_CHUNK_WAIT,
+              names.SPAN_DISPATCH):
+        kids = [e for e in by_name[n]]
+        assert kids, f"no {n} spans in trace"
+    gens = [e for e in by_name[names.SPAN_TRACE_GEN]
+            if e["parent"] == fill["id"]]
+    assert sorted(e["attrs"]["wl"] for e in gens) == ["bc", "rnd"]
+
+
+def test_run_ladder_tracer_overhead_bounded(ladder_fill):
+    """Tracer overhead < 2% of the sim wall time (generous: the bound
+    the ISSUE sets for the tiny-N CI fill)."""
+    sim_s = ladder_fill["rec"]["compile_plus_sim_wall_s"]
+    assert ladder_fill["overhead"] < 0.02 * max(sim_s, 0.05)
+
+
+def test_compile_events_in_trace(ladder_fill):
+    tr = ladder_fill["tr"]
+    compiles = [e for e in tr.events if e["name"] == names.EV_COMPILE]
+    assert compiles, "no xla_compile events captured"
+    fill_id = [e for e in tr.events
+               if e["name"] == names.SPAN_LADDER_FILL][-1]["id"]
+    assert all(e["parent"] == fill_id for e in compiles)
+    fns = {e["attrs"]["fn"] for e in compiles}
+    assert "run_systems" in fns
+
+
+# ------------------------------------------------- time-shard events
+
+
+def test_time_shard_round_events(tr):
+    from repro.sim import parallel
+
+    def block_fn(st, blk):
+        return st + jnp.sum(blk)
+
+    trace = jnp.arange(8, dtype=jnp.int32)
+    final, info = parallel.time_shard_scan(block_fn, jnp.int32(0), trace,
+                                           t_shards=4)
+    assert int(final) == 28
+    evs = [e for e in tr.events if e["name"] == names.EV_TIME_SHARD_ROUND]
+    assert len(evs) == info["rounds"]
+    prefixes = [e["attrs"]["known_prefix"] for e in evs]
+    assert prefixes == sorted(prefixes)  # exact prefix only grows
+    assert prefixes[-1] == info["t_shards"]
+    assert all(e["attrs"]["t_shards"] == info["t_shards"] for e in evs)
+
+
+# ----------------------------------------------------- serve metrics
+
+
+def test_engine_stats_routes_through_registry(tr):
+    from repro.serve import engine
+
+    obs.REGISTRY.reset()
+    cfg = engine.EngineConfig(n_slots=4, max_blocks_per_req=8,
+                              n_pool_pages=64, n_leaf_rows=32,
+                              tc_sets=8, tc_ways=2, n_clusters=16)
+    st = engine.init(cfg)
+    for s in range(4):
+        st = engine.admit(st, s, 2)
+    for _ in range(6):
+        st, _, _ = engine.decode_step(st, cfg)
+    st = engine.retire(st, 1)
+    s = engine.stats(st)
+    for k in ("tc_hit_rate", "cluster_hit_rate", "walk_rate",
+              "vtc_hit_rate", "pages_free", "slot_occupancy",
+              "invalidate_count"):
+        assert k in s, k
+    assert s["vtc_hit_rate"] == s["tc_hit_rate"] + s["cluster_hit_rate"]
+    assert s["slot_occupancy"] == 0.75
+    assert s["invalidate_count"] >= 1  # slot 1 had live translations
+    snap = obs.REGISTRY.snapshot()
+    assert snap["gauges"][names.GAUGE_PAGES_FREE] == s["pages_free"]
+    assert snap["counters"][names.CTR_VTC_WALK] >= 1
+    h = snap["hists"][names.HIST_DECODE_STEP_S]
+    assert h["count"] == 6 and h["p99"] > 0
+    assert obs.REGISTRY.counter(names.CTR_DECODE_STEPS) == 6
+    # repeated sampling is idempotent (inc_to, not inc)
+    walks = snap["counters"][names.CTR_VTC_WALK]
+    engine.stats(st)
+    assert obs.REGISTRY.snapshot()["counters"][names.CTR_VTC_WALK] == walks
+
+
+def test_engine_retire_countable_under_jit(tr):
+    from repro.serve import engine
+
+    cfg = engine.EngineConfig(n_slots=2, max_blocks_per_req=4,
+                              n_pool_pages=32, n_leaf_rows=16,
+                              tc_sets=8, tc_ways=2, n_clusters=8)
+    st = engine.init(cfg)
+    st = engine.admit(st, 0, 2)
+    # jit-traced retire: invalidation counts are tracers; the registry
+    # guard must skip (not crash), and results must match the host path
+    st_jit = jax.jit(lambda s: engine.retire(s, 0))(st)
+    st_host = engine.retire(st, 0)
+    assert bool(jnp.all(st_jit.slot_live == st_host.slot_live))
+
+
+def test_vtc_invalidation_counts_match_invalidate():
+    from repro.paged import translation_cache as vtc_mod
+
+    vtc = vtc_mod.make(8, 2, 16)
+    # hand-place entries for two requests
+    vtc = vtc._replace(
+        tc_tags=vtc.tc_tags.at[0, 0].set((1 << 20) | 3)
+                           .at[1, 1].set((2 << 20) | 4),
+        tc_valid=vtc.tc_valid.at[0, 0].set(True).at[1, 1].set(True),
+        cl_tags=vtc.cl_tags.at[5].set(((1 << 20) | 8) >> 3),
+        cl_valid=vtc.cl_valid.at[5].set(True))
+    n_tc, n_cl = vtc_mod.invalidation_counts(vtc, 1)
+    assert (int(n_tc), int(n_cl)) == (1, 1)
+    after = vtc_mod.invalidate_request(vtc, 1)
+    assert int(jnp.sum(vtc.tc_valid)) - int(jnp.sum(after.tc_valid)) == 1
+    assert int(jnp.sum(vtc.cl_valid)) - int(jnp.sum(after.cl_valid)) == 1
+    s = vtc_mod.stats(vtc)
+    assert s["vtc_hit_rate"] == 0.0 and 0 < s["tc_occupancy"] < 1
+
+
+# ---------------------------------------------------------- CLI
+
+
+def _write_bench(path, fills):
+    art = {"schema": 5, "ladder_fills": fills}
+    path.write_text(json.dumps(art))
+    return str(path)
+
+
+def test_cli_report_check_ok(ladder_fill, tmp_path, capsys):
+    from repro.obs.__main__ import main
+
+    tr = ladder_fill["tr"]
+    tr.flush()
+    bench = _write_bench(tmp_path / "BENCH_sweep.json", [ladder_fill["rec"]])
+    rc = main(["report", tr.path, "--check", bench])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "check OK" in out and "bit-exact" in out
+
+
+def test_cli_report_check_catches_drift(ladder_fill, tmp_path, capsys):
+    from repro.obs.__main__ import main
+
+    tr = ladder_fill["tr"]
+    tr.flush()
+    doctored = dict(ladder_fill["rec"], dispatch_compiles=9)
+    bench = _write_bench(tmp_path / "BENCH_doctored.json", [doctored])
+    rc = main(["report", tr.path, "--check", bench])
+    err = capsys.readouterr().err
+    assert rc == 1
+    assert "dispatch_compiles" in err
+
+
+def test_cli_diff_warns_on_regression(tmp_path, capsys):
+    from repro.obs.__main__ import main
+
+    base = {"ladder": "np", "sim_n": 128, "n_workloads": 2,
+            "backend": "scan", "chunk": 2, "t_shards": 1,
+            "trace_gen_wall_s": 0.1, "compile_plus_sim_wall_s": 10.0}
+    slow = dict(base, compile_plus_sim_wall_s=15.0)  # +50%
+    old = _write_bench(tmp_path / "old.json", [base])
+    new = _write_bench(tmp_path / "new.json", [slow])
+    rc = main(["diff", old, new, "--warn-pct", "20"])
+    cap = capsys.readouterr()
+    assert rc == 0  # warn-only by default: CI must not hard-fail
+    assert "regression" in cap.err and "+50.0%" in cap.err
+    assert main(["diff", old, new, "--warn-pct", "20", "--fail"]) == 1
+    capsys.readouterr()
+    # within threshold: silent
+    ok = _write_bench(tmp_path / "ok.json",
+                      [dict(base, compile_plus_sim_wall_s=11.0)])
+    rc = main(["diff", old, ok, "--warn-pct", "20"])
+    assert rc == 0 and capsys.readouterr().err == ""
+
+
+# ---------------------------------------------------- sweep CLI flag
+
+
+def test_sweep_parse_obs_trace():
+    from repro.sim import sweep
+
+    _, _, opts = sweep.parse_args(["--obs-trace", "/tmp/t.jsonl"])
+    assert opts["obs_trace"] == "/tmp/t.jsonl"
+    _, _, opts = sweep.parse_args(["--obs-trace=/tmp/t2.jsonl"])
+    assert opts["obs_trace"] == "/tmp/t2.jsonl"
+    with pytest.raises(SystemExit):
+        sweep.parse_args(["--obs-trace"])  # missing value
+    with pytest.raises(SystemExit):
+        sweep.parse_args(["--obs-trace", "--tags"])  # flag as value
+
+
+# --------------------------------------------------------- OB001
+
+
+def test_ob001_clean_on_repo():
+    from repro.analysis import obs_contract
+
+    assert obs_contract.run() == []
+
+
+def test_ob001_catches_hand_assembled_append(tmp_path):
+    from repro.analysis import obs_contract
+
+    bad = tmp_path / "runner.py"
+    bad.write_text(
+        "fill = obs.span(obs.names.SPAN_LADDER_FILL, ladder=l)\n"
+        "LADDER_PERF.append({'ladder': l, 'wall': 1.0})\n")
+    findings = obs_contract.check_runner_appends(str(bad))
+    assert len(findings) == 1 and "hand-assembled" in findings[0]
+
+
+def test_ob001_catches_missing_fill_attr(tmp_path):
+    from repro.analysis import obs_contract
+
+    # a runner that never sets sim_n (or any other attr source)
+    bad = tmp_path / "runner.py"
+    bad.write_text(
+        "fill = obs.span(obs.names.SPAN_LADDER_FILL, ladder=l)\n"
+        "LADDER_PERF.append(obs.report.fill_record(tr.events, fill.id))\n")
+    findings = obs_contract.check_field_sources(str(bad))
+    assert any("sim_n" in f for f in findings)
+    assert all(f.startswith("OB001") for f in findings)
+
+
+def test_ob001_in_static_passes():
+    from repro import analysis
+
+    assert "obs" in analysis.PASSES
+    assert "obs" in analysis.STATIC_PASSES
