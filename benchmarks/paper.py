@@ -316,6 +316,68 @@ def scheme_comparison():
     return rows
 
 
+# ------------------------------------------------------------- multicore
+
+
+MC_MIX = os.environ.get("REPRO_SIM_MIX", "bc+rnd+xs")
+
+
+def _mc_sys(name, workload):
+    """Warm one multicore system through its batched family ladder, then
+    return its (possibly per-core-tuple) result for `workload`."""
+    if name in _LADDER_OF:
+        run_ladder(_LADDER_OF[name], workloads=[workload], n=N)
+    t0 = time.time()
+    out = run_batch(name, workloads=[workload], n=N)
+    us = (time.time() - t0) * 1e6 / N
+    return out[workload], us
+
+
+def _lanes(result):
+    """Normalize a sim result to per-core-lane tuples: multicore results
+    are already (stats..., extras..., specs...); single-core results
+    become 1-lane tuples so the same reductions apply."""
+    stats, extras, _ = result
+    # Stats is itself a NamedTuple, so detect the per-core tuple by the
+    # ABSENCE of NamedTuple fields on the outer value
+    if isinstance(stats, tuple) and not hasattr(stats, "_fields"):
+        return stats, extras
+    return (stats,), (extras,)
+
+
+def multicore_scaling():
+    """Beyond-paper: multicore MMU scaling.  Each core count's whole
+    {radix, victima, pom, victima+DRAM-cache} family fills from ONE
+    compiled vmapped ladder call — per-core private TLB hierarchies
+    share a capacity-partitioned, port-contended L3/POM tier, with the
+    multiprogrammed mix round-robined across the core lanes (1 core
+    degenerates to the mix's first component).  Rows report the mean
+    per-core critical-path PTW reduction vs the same-C radix baseline
+    and how much of the shared L3's traffic is translation metadata
+    (TLB blocks + PTE lines) — the paper's underutilized-cache argument
+    under multiprogrammed contention."""
+    names = trace_gen.parse_mix(MC_MIX)
+    rows = []
+    for c in (1, 2, 4):
+        wl = MC_MIX if c > 1 else names[0]
+        base, _ = _mc_sys(f"radix_{c}c", wl)
+        b_stats, _ = _lanes(base)
+        for scheme in ("victima", "pom", "victima_dramc"):
+            out, us = _mc_sys(f"{scheme}_{c}c", wl)
+            s_stats, s_extras = _lanes(out)
+            red = metrics.mean_ptw_reduction(b_stats, s_stats)
+            share = float(np.mean(
+                [metrics.l3_translation_share(e) for e in s_extras]))
+            derived = (f"{red*100:.0f}% fewer per-core PTWs, "
+                       f"L3 {share*100:.1f}% translation traffic")
+            if scheme == "victima_dramc":
+                hit = float(np.mean(
+                    [metrics.dramc_hit_rate(e) for e in s_extras]))
+                derived += f", dramc hit {hit*100:.0f}%"
+            rows.append((f"multicore_{c}c_{scheme}", us, derived))
+    return rows
+
+
 # ---------------------------------------------------------------- §9 virt
 
 
@@ -409,13 +471,17 @@ def write_sweep_artifact(path: str | None = None) -> str:
     time, vs the consumer-side wait ``trace_gen_wall_s``) and
     ``trace_file`` (the JSONL the record derives from — ``python -m
     repro.obs report <trace> --check <artifact>`` re-derives every
-    record bit-exactly; schema-4 fields are unchanged).  When fills
-    ran under both backends, a scan-vs-pallas speedup line is printed
-    so the perf trajectory is visible per PR.
+    record bit-exactly; schema-4 fields are unchanged).  New in 6:
+    each fill carries ``cores`` — the per-system core-lane count (1
+    for every single-core family; C for the multicore families whose
+    multiprogrammed mixes ride the core axis) — and schema-5 fields
+    are bit-compatible.  When fills ran under both backends, a
+    scan-vs-pallas speedup line is printed so the perf trajectory is
+    visible per PR.
     """
     path = path or os.environ.get("REPRO_BENCH_SWEEP", "BENCH_sweep.json")
     artifact = {
-        "schema": 5,
+        "schema": 6,
         "sim_n": N,
         "devices": jax.local_device_count(),
         "workloads": WLS,
@@ -449,6 +515,7 @@ ALL = [
     ablation_ptwcp,
     utopia_comparison,
     scheme_comparison,
+    multicore_scaling,
     fig27_virt_speedup,
     fig28_guest_host_ptws,
     fig29_virt_miss_latency,

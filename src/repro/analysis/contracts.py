@@ -58,6 +58,11 @@ STATE_GATES = {
     "collect": ("feats",),
 }
 STATE_MAX_GATES = ("l3tlb",)  # sized via max(cfg.*_sets, 1)
+# size-gated allocations nested inside another kwarg's constructor call:
+# state kwarg -> cfg size fields that must each appear as max(cfg.<f>, 1).
+# The die-stacked DRAM cache rides the Hier constructor, so its
+# sized-1-when-off guard lives inside the hier= expression.
+STATE_NESTED_MAX_GATES = {"hier": ("dram_cache_sets",)}
 
 
 # --------------------------------------------------------------- C001
@@ -180,10 +185,28 @@ def _max1_ok(node: ast.expr) -> bool:
     return False
 
 
-def check_make_state(path=None, state_gates=None, max_gates=None) -> list:
+def _max1_of(node: ast.expr, field: str) -> bool:
+    """Does ``node`` contain ``max(<x involving cfg.field>, 1)``?"""
+    for sub in ast.walk(node):
+        if (isinstance(sub, ast.Call) and isinstance(sub.func, ast.Name)
+                and sub.func.id == "max"
+                and any(isinstance(a, ast.Constant) and a.value == 1
+                        for a in sub.args)
+                and any(isinstance(t, ast.Attribute) and t.attr == field
+                        and isinstance(t.value, ast.Name)
+                        and t.value.id == "cfg"
+                        for a in sub.args for t in ast.walk(a))):
+            return True
+    return False
+
+
+def check_make_state(path=None, state_gates=None, max_gates=None,
+                     nested_max_gates=None) -> list:
     path = Path(path) if path else STAGES_DIR / "base.py"
     state_gates = STATE_GATES if state_gates is None else state_gates
     max_gates = STATE_MAX_GATES if max_gates is None else max_gates
+    nested_max_gates = (STATE_NESTED_MAX_GATES if nested_max_gates is None
+                        else nested_max_gates)
     tree = ast.parse(path.read_text())
     fn = next((n for n in ast.walk(tree)
                if isinstance(n, ast.FunctionDef) and n.name == "make_state"),
@@ -219,6 +242,17 @@ def check_make_state(path=None, state_gates=None, max_gates=None) -> list:
             findings.append(
                 f"C004 make_state: state field {sf!r} gates on a size and "
                 f"must be allocated via max(<sets>, 1)")
+    for sf, cfg_fields in nested_max_gates.items():
+        for cf in cfg_fields:
+            if sf not in kwargs:
+                findings.append(
+                    f"C004 make_state: expected state field {sf!r} is not "
+                    f"allocated")
+            elif not _max1_of(kwargs[sf], cf):
+                findings.append(
+                    f"C004 make_state: state field {sf!r} must size its "
+                    f"cfg.{cf} region via max(cfg.{cf}, 1) so off lanes "
+                    f"carry a 1-entry structure")
     return findings
 
 

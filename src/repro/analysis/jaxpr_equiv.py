@@ -99,8 +99,12 @@ def canonicalize(jaxpr) -> list:
     return lines
 
 
-def _structs():
-    """ShapeDtypeStruct pytrees for (state, access-record) tracing."""
+def _structs(cfg=None):
+    """ShapeDtypeStruct pytrees for (state, access-record) tracing.
+
+    Multicore configs see an extra ``core`` lane-id leaf, exactly as
+    the real multiprogrammed-mix dispatch supplies it — the traced
+    graph must match what the batched sweep actually compiles."""
     import jax
     import jax.numpy as jnp
 
@@ -110,6 +114,8 @@ def _structs():
     acc = {k: jax.ShapeDtypeStruct((), jnp.asarray(v[:1]).dtype)
            for k, v in g["trace"].items()}
     acc["ipa"] = jax.ShapeDtypeStruct((), jnp.float32)
+    if cfg is not None and cfg.n_cores > 1:
+        acc["core"] = jax.ShapeDtypeStruct((), jnp.int32)
     return acc
 
 
@@ -129,7 +135,7 @@ def member_jaxpr(base_cfg, dyn, stage_names=None):
     from repro.core import mmu
 
     step = mmu.make_step(base_cfg, stage_names, dyn=dyn)
-    return jax.make_jaxpr(step)(_state_struct(base_cfg), _structs())
+    return jax.make_jaxpr(step)(_state_struct(base_cfg), _structs(base_cfg))
 
 
 def diff_canonical(ref_name, ref_lines, name, lines) -> str | None:
@@ -210,7 +216,7 @@ def check_family(fam_name: str, members, progress=None) -> FamilyReport:
 
         jax.eval_shape(
             lambda st, acc, dd: mmu.make_step(base_cfg, None, dyn=dd)(st, acc),
-            _state_struct(base_cfg), _structs(), dyn_struct)
+            _state_struct(base_cfg), _structs(base_cfg), dyn_struct)
     except Exception as e:
         rep.findings.append(
             f"JX003 family '{fam_name}': step does not trace with "

@@ -1,11 +1,11 @@
 """OB001: the BENCH_sweep record is fully derivable from the obs trace.
 
-The schema-5 contract (mirroring the C007 orphan-Stats discipline): no
+The schema-6 contract (mirroring the C007 orphan-Stats discipline): no
 ``LADDER_PERF`` field may be hand-set in ``sim.runner`` — every field
 must flow through ``obs.report.FIELD_SOURCES``, and every source must
 reference something the instrumentation actually emits.  Three checks:
 
-- the ``FIELD_SOURCES`` table and ``SCHEMA5_FIELDS`` are mutually
+- the ``FIELD_SOURCES`` table and ``SCHEMA6_FIELDS`` are mutually
   closed (no orphan field, no dangling source), and each source is
   well-formed: span sums name a declared span, attr sources name an
   attribute the ``ladder_fill`` span in ``sim/runner.py`` actually sets
@@ -72,16 +72,16 @@ def _fill_span_attrs(runner_path=None) -> set:
 def check_field_sources(runner_path=None) -> list:
     """Table closure + source well-formedness (the core OB001 check)."""
     findings = []
-    fields = set(report.SCHEMA5_FIELDS)
+    fields = set(report.SCHEMA6_FIELDS)
     sources = set(report.FIELD_SOURCES)
     for f in sorted(fields - sources):
         findings.append(
-            f"OB001 schema-5 field {f!r} has no FIELD_SOURCES entry — "
+            f"OB001 schema-6 field {f!r} has no FIELD_SOURCES entry — "
             f"it cannot be derived from the trace (orphan hand-set "
             f"field)")
     for f in sorted(sources - fields):
         findings.append(
-            f"OB001 FIELD_SOURCES entry {f!r} is not a schema-5 field "
+            f"OB001 FIELD_SOURCES entry {f!r} is not a schema-6 field "
             f"(dangling source)")
 
     span_attrs = _fill_span_attrs(runner_path)

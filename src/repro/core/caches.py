@@ -251,19 +251,33 @@ class Hier(NamedTuple):
     l1d: Assoc
     l2: L2Cache
     l3: Assoc
+    dramc: Assoc            # die-stacked DRAM cache (sized 1 when off)
     # running counters for MPKI-style signals
     n_l2_access: jax.Array  # int32 — demand data accesses reaching L2
     n_l2_miss: jax.Array    # int32
+    # shared-tier occupancy counters (multicore scenario bookkeeping)
+    n_l3_access: jax.Array   # int32 — demand probes reaching the L3
+    n_l3_trans: jax.Array    # int32 — of those, translation-typed
+    #                          (walker PTE / TLB-block / POM traffic)
+    n_dramc_access: jax.Array  # int32 — L3 misses probing the DRAM cache
+    n_dramc_hit: jax.Array     # int32
 
 
 def make_hier(l1_sets=64, l1_ways=8, l2_sets=2048, l2_ways=16,
-              l3_sets=2048, l3_ways=16) -> Hier:
+              l3_sets=2048, l3_ways=16,
+              dramc_sets=1, dramc_ways=16) -> Hier:
+    z = jnp.int32(0)
     return Hier(
         l1d=make(l1_sets, l1_ways),
         l2=make_l2(l2_sets, l2_ways),
         l3=make(l3_sets, l3_ways),
-        n_l2_access=jnp.int32(0),
-        n_l2_miss=jnp.int32(0),
+        dramc=make(dramc_sets, dramc_ways),
+        n_l2_access=z,
+        n_l2_miss=z,
+        n_l3_access=z,
+        n_l3_trans=z,
+        n_dramc_access=z,
+        n_dramc_hit=z,
     )
 
 
@@ -274,12 +288,43 @@ class Lat(NamedTuple):
     l2: int = 16
     l3: int = 35
     dram: int = 160  # full DRAM round trip (beyond L3 probe)
+    dramc: int = 58  # die-stacked DRAM-cache hit (beyond L3 probe) —
+    #   in-package DRAM, roughly a third of the off-package round trip
+
+
+def _dramc_probe(h: Hier, line: jax.Array, miss3, lat: Lat, dramc):
+    """Probe the die-stacked DRAM cache on an L3 miss (SRRIP, same
+    policy as the L3 — it is an ``Assoc`` driven by ``l3_access``).
+
+    ``dramc`` is the live gate (see ``stages.base.dramc_of``): ``None``
+    compiles the probe out and this reduces to the plain DRAM path; a
+    traced ``False`` masks it off bit-exactly (the miss cost folds back
+    to exactly ``lat.dram``).  Returns (h, miss_cyc, dram) where
+    ``miss_cyc`` is the beyond-L3 cycle term and ``dram`` the accesses
+    that still went to main memory.
+    """
+    if dramc is None:
+        return h, jnp.int32(lat.dram), miss3
+    gate = jnp.asarray(dramc) & miss3
+    dcc, hitd = l3_access(h.dramc, line, gate)
+    h = h._replace(
+        dramc=dcc,
+        n_dramc_access=h.n_dramc_access + gate.astype(jnp.int32),
+        n_dramc_hit=h.n_dramc_hit + (gate & hitd).astype(jnp.int32),
+    )
+    dram = miss3 & ~(gate & hitd)
+    miss_cyc = jnp.where(
+        gate, jnp.int32(lat.dramc) + jnp.where(hitd, 0, lat.dram),
+        jnp.int32(lat.dram))
+    return h, miss_cyc, dram
 
 
 def access_data(h: Hier, line: jax.Array, now: jax.Array,
                 pressure: jax.Array, tlb_aware: bool, lat: Lat,
-                geom: L2Geom | None = None):
-    """Demand data access L1D→L2→L3→DRAM with fills. Returns (h, cycles)."""
+                geom: L2Geom | None = None, dramc=None):
+    """Demand data access L1D→L2→L3→[DRAM cache]→DRAM with fills.
+    Returns (h, cycles).  ``dramc`` gates the die-stacked DRAM-cache
+    probe (None = absent, compiled out)."""
     hit1, w1, s1 = lookup(h.l1d, line)
     h = h._replace(l1d=touch_lru(h.l1d, s1, w1, now))
 
@@ -315,37 +360,52 @@ def access_data(h: Hier, line: jax.Array, now: jax.Array,
         l2c = l2_insert(l2c, bg_line, BT_DATA, pressure, tlb_aware,
                         ~bg_hit3, geom)
 
+    # die-stacked DRAM cache between the L3 and main memory (background
+    # lines model pressure only — they never charge latency, so they
+    # skip the probe)
+    h, miss_cyc, _dram = _dramc_probe(
+        h._replace(l3=l3c), line, go_l3 & ~hit3, lat, dramc)
+
     cycles = jnp.where(
         hit1, lat.l1d,
-        jnp.where(hit2, lat.l2, jnp.where(hit3, lat.l3, lat.l3 + lat.dram)),
+        jnp.where(hit2, lat.l2, jnp.where(hit3, lat.l3, lat.l3 + miss_cyc)),
     )
-    h = Hier(
+    h = h._replace(
         l1d=l1c,
         l2=l2c,
-        l3=l3c,
         n_l2_access=h.n_l2_access + go_l2.astype(jnp.int32),
         n_l2_miss=h.n_l2_miss + (go_l3).astype(jnp.int32),
+        n_l3_access=h.n_l3_access + go_l3.astype(jnp.int32),
     )
     return h, cycles
 
 
 def access_pte(h: Hier, line: jax.Array, pressure: jax.Array,
                tlb_aware: bool, lat: Lat, enable, bt: int = BT_DATA,
-               geom: L2Geom | None = None):
+               geom: L2Geom | None = None, dramc=None):
     """Page-table-walker access (starts at L2). Returns (h, cycles, dram).
 
     `bt` lets POM-TLB lines be typed as TLB blocks so the TLB-aware SRRIP
-    prioritizes them (Table 3: POM-TLB uses the §5.1 policy)."""
+    prioritizes them (Table 3: POM-TLB uses the §5.1 policy).  ``dramc``
+    gates the die-stacked DRAM-cache probe between the L3 and main
+    memory (None = absent, compiled out); a DRAM-cache hit counts as
+    ``dram=False`` — the walk never left the package."""
     en = jnp.asarray(enable)
     hit2, w2, s2 = l2_lookup(h.l2, line, bt, geom)
     l2c = l2_touch(h.l2, s2, w2, pressure, tlb_aware, en & hit2)
     go_l3 = en & ~hit2
     l3c, hit3 = l3_access(h.l3, line, go_l3)
     l2c = l2_insert(l2c, line, bt, pressure, tlb_aware, go_l3, geom)
-    dram = go_l3 & ~hit3
+    h, miss_cyc, dram = _dramc_probe(
+        h._replace(l3=l3c), line, go_l3 & ~hit3, lat, dramc)
     cycles = jnp.where(
         en,
-        jnp.where(hit2, lat.l2, jnp.where(hit3, lat.l3, lat.l3 + lat.dram)),
+        jnp.where(hit2, lat.l2, jnp.where(hit3, lat.l3, lat.l3 + miss_cyc)),
         0,
     )
-    return h._replace(l2=l2c, l3=l3c), cycles, dram
+    h = h._replace(
+        l2=l2c,
+        n_l3_access=h.n_l3_access + go_l3.astype(jnp.int32),
+        n_l3_trans=h.n_l3_trans + go_l3.astype(jnp.int32),
+    )
+    return h, cycles, dram

@@ -35,8 +35,47 @@ def reduction(base_n: float, new_n: float) -> float:
     return 0.0 if b == 0.0 else 1.0 - float(new_n) / b
 
 
+def rate(num: float, den: float) -> float:
+    """num/den with the same degenerate contract as ``reduction``: a
+    denominator of zero means the event never happened, so the rate is
+    0.0 — NOT ``num/max(den, 1)``, which silently reports a wrong
+    nonzero value whenever ``num > 0 and den == 0`` can occur (and which
+    hides bugs where it can't).  Every per-core metric routes through
+    here so an idle lane in a multiprogrammed mix reports exactly 0.0.
+    """
+    d = float(den)
+    return 0.0 if d == 0.0 else float(num) / d
+
+
 def ptw_reduction(base_stats, new_stats) -> float:
     return reduction(base_stats.n_demand_ptw, new_stats.n_demand_ptw)
+
+
+def per_core_ptw_reduction(base_stats, new_stats) -> list:
+    """Per-core-lane PTW reductions for multicore results (each result is
+    a tuple of per-core Stats).  Idle lanes — zero baseline walks — come
+    out as 0.0 through ``reduction``'s base==0 guard rather than a
+    nonsense negative number."""
+    return [ptw_reduction(b, n) for b, n in zip(base_stats, new_stats)]
+
+
+def mean_ptw_reduction(base_stats, new_stats) -> float:
+    """Mean of the per-core PTW reductions (the multicore headline)."""
+    per = per_core_ptw_reduction(base_stats, new_stats)
+    return rate(sum(per), len(per))
+
+
+def l3_translation_share(extras: dict) -> float:
+    """Fraction of shared-L3 cache accesses that were translation
+    traffic (TLB-block or PTE lines), from a shared-tier extras dict.
+    Zero L3 accesses — e.g. an idle core lane — reports 0.0."""
+    return rate(extras.get("l3_trans", 0), extras.get("l3_access", 0))
+
+
+def dramc_hit_rate(extras: dict) -> float:
+    """Die-stacked DRAM-cache hit rate from a shared-tier extras dict;
+    0.0 when the DRAM cache is compiled out (no accesses)."""
+    return rate(extras.get("dramc_hit", 0), extras.get("dramc_access", 0))
 
 
 def host_ptw_reduction(base_stats, new_stats) -> float:

@@ -41,8 +41,8 @@ from repro.sim import parallel
 from repro.core.caches import BT_DATA, access_data
 from repro.core.stages import (Dyn, Feats, MMUState, Request, STAGES,
                                SimConfig, Stats, WALK_HIST_BUCKETS,
-                               default_stages, fill_order, l2_geom_of,
-                               make_state, validate_stages)
+                               default_stages, dramc_of, fill_order,
+                               l2_geom_of, make_state, validate_stages)
 from repro.core.stages.fold import accum_stats, collect_feats
 
 __all__ = [
@@ -109,6 +109,7 @@ def make_step(cfg: SimConfig, stage_names=None, dyn: Dyn | None = None):
     pressure_thr = jnp.float32(cfg.pressure_mpki)
     bypass_thr = jnp.float32(cfg.bypass_l2mpki)
     geom = l2_geom_of(dyn)  # dynamic L2-cache view (None = static)
+    dramc = dramc_of(cfg, dyn)  # DRAM-cache gate (None = compiled out)
 
     def step(st: MMUState, acc):
         vpn = acc["vpn"]
@@ -150,11 +151,22 @@ def make_step(cfg: SimConfig, stage_names=None, dyn: Dyn | None = None):
         for stg in fills:
             st = stg.fill(cfg, st, req, out)
 
+        # shared-tier port contention (multicore only): accesses that
+        # went past the private L2 TLB contend for the shared L3/POM/
+        # walker port.  The rotating-slot queue delay is deterministic
+        # per (core, now), so vmapped core lanes stay bit-reproducible
+        # and independent of lane evaluation order.
+        if cfg.n_cores > 1:
+            core = acc.get("core", jnp.int32(0))
+            slot = (core + now) % jnp.int32(cfg.n_cores)
+            q = jnp.int32(cfg.shared_port_cyc) * slot
+            past_l2 = past_l2 + jnp.where(out["l2_tlb"].need, q, 0)
+
         trans = trans + past_l2
 
         # ---------------- the data access itself
         hier, dcyc = access_data(st.hier, req.line, now, pressure,
-                                 cfg.tlb_aware, cfg.lat, geom)
+                                 cfg.tlb_aware, cfg.lat, geom, dramc)
         st = st._replace(hier=hier)
 
         st = st._replace(stats=accum_stats(s0, st, out, walk_res,
@@ -187,13 +199,29 @@ def _finalize(st: MMUState, batch_dims: int = 0):
         hists = jax.vmap(hists)
     hd, ht = hists(st.hier.l2)
     return (st.stats, st.hier.n_l2_access, st.hier.n_l2_miss, hd, ht,
-            st.feats, st.pc4)
+            st.feats, st.pc4,
+            (st.hier.n_l3_access, st.hier.n_l3_trans,
+             st.hier.n_dramc_access, st.hier.n_dramc_hit))
 
 
-def _extras_of(cfg, l2a, l2m, hd, ht, feats, pc4, index=lambda x: x):
+def _shared_tier_extras(cfg) -> bool:
+    """Whether the shared-tier (L3/DRAM-cache) counters surface in extras.
+    Gated so single-core extras stay byte-identical to the pre-multicore
+    pickles (the sim cache stores extras verbatim)."""
+    return (cfg.n_cores > 1 or cfg.dram_cache_sets > 0
+            or cfg.shared_tier_stats)
+
+
+def _extras_of(cfg, l2a, l2m, hd, ht, feats, pc4, shared=None,
+               index=lambda x: x):
     e = {"l2_access": int(index(l2a)), "l2_miss": int(index(l2m)),
          "hist_reuse_data": jax.device_get(index(hd)),
          "hist_reuse_tlb": jax.device_get(index(ht))}
+    if shared is not None and _shared_tier_extras(cfg):
+        e["l3_access"] = int(index(shared[0]))
+        e["l3_trans"] = int(index(shared[1]))
+        e["dramc_access"] = int(index(shared[2]))
+        e["dramc_hit"] = int(index(shared[3]))
     if cfg.collect:
         e["feats"] = jax.tree.map(lambda x: jax.device_get(index(x)), feats)
         e["pc4"] = jax.tree.map(lambda x: jax.device_get(index(x)), pc4)
@@ -230,9 +258,9 @@ def simulate(cfg: SimConfig, trace: dict, stage_names=None,
             return _finalize(st)
 
         outs = run(trace)
-    stats, l2a, l2m, hd, ht, feats, pc4 = outs
+    stats, l2a, l2m, hd, ht, feats, pc4, shared = outs
     stats = jax.tree.map(lambda x: jax.device_get(x), stats)
-    return stats, _extras_of(cfg, l2a, l2m, hd, ht, feats, pc4)
+    return stats, _extras_of(cfg, l2a, l2m, hd, ht, feats, pc4, shared)
 
 
 def simulate_batch(cfg: SimConfig, traces: dict, stage_names=None,
@@ -257,9 +285,9 @@ def simulate_batch(cfg: SimConfig, traces: dict, stage_names=None,
             backend=backend, block=block)
         return _finalize(st, batch_dims=1)
 
-    stats, l2a, l2m, hd, ht, feats, pc4 = run(traces)
+    stats, l2a, l2m, hd, ht, feats, pc4, shared = run(traces)
     stats = jax.tree.map(jax.device_get, stats)
-    extras = [_extras_of(cfg, l2a, l2m, hd, ht, feats, pc4,
+    extras = [_extras_of(cfg, l2a, l2m, hd, ht, feats, pc4, shared,
                          index=lambda x, i=i: x[i]) for i in range(W)]
     per = [jax.tree.map(lambda x, i=i: x[i], stats) for i in range(W)]
     return per, extras
@@ -315,10 +343,27 @@ def make_systems_runner(cfg: SimConfig, plan, stage_names=None,
             f"to the 't' mesh axis), got {plan.describe()}")
 
     def run_systems(d, tr):
-        # derive the workload width from tr: under shard_map this body
-        # sees one [S_blk] x [W_blk] mesh block, not the full grid
-        w_blk = jax.tree.leaves(tr)[0].shape[1]
-        st0 = _broadcast_state(cfg, (w_blk,))
+        # derive the lane width from tr: under shard_map this body sees
+        # one [S_blk] x [W_blk] (x [C_blk]) mesh block, not the full grid
+        leaf = jax.tree.leaves(tr)[0]
+        w_blk = leaf.shape[1]
+        # multicore: per-core lanes ([T, W, C] traces) ride the vmapped
+        # workload axis — flatten to [T, W*C], un-flatten the outputs so
+        # the mesh out_specs see a [S, W, C]-leading grid
+        c_blk = leaf.shape[2] if leaf.ndim >= 3 else None
+        if c_blk is not None:
+            tr = jax.tree.map(
+                lambda x: x.reshape((x.shape[0], w_blk * c_blk)
+                                    + x.shape[3:]), tr)
+        lanes = w_blk if c_blk is None else w_blk * c_blk
+        st0 = _broadcast_state(cfg, (lanes,))
+
+        def unflatten(outs):
+            if c_blk is None:
+                return outs
+            return jax.tree.map(
+                lambda x: x.reshape(x.shape[:1] + (w_blk, c_blk)
+                                    + x.shape[2:]), outs)
 
         if backend == "scan":
             def one_system(dd):
@@ -328,14 +373,14 @@ def make_systems_runner(cfg: SimConfig, plan, stage_names=None,
                     st0, tr)
                 return _finalize(st, batch_dims=1)
 
-            return jax.vmap(one_system)(d)
+            return unflatten(jax.vmap(one_system)(d))
         # pallas: the system vmap moves inside the kernel's inner scan
         # (see _step_sw) so the pallas_call itself is never vmapped
         s_blk = jax.tree.leaves(d)[0].shape[0]
         st = scan_accesses(_step_sw(cfg, stage_names),
-                           _broadcast_state(cfg, (s_blk, w_blk)), tr,
+                           _broadcast_state(cfg, (s_blk, lanes)), tr,
                            backend=backend, consts=d, block=block)
-        return _finalize(st, batch_dims=2)
+        return unflatten(_finalize(st, batch_dims=2))
 
     if t_shards <= 1:
         dispatch = parallel.shard_wrap(run_systems, plan)
@@ -344,29 +389,54 @@ def make_systems_runner(cfg: SimConfig, plan, stage_names=None,
 
         def dispatch(dyns, traces):
             S = jax.tree.leaves(dyns)[0].shape[0]
-            W = jax.tree.leaves(traces)[0].shape[1]
+            leaf = jax.tree.leaves(traces)[0]
+            W = leaf.shape[1]
+            c = leaf.shape[2] if leaf.ndim >= 3 else None
+            if c is not None:  # core lanes ride the workload axis
+                traces = jax.tree.map(
+                    lambda x: x.reshape((x.shape[0], W * c)
+                                        + x.shape[3:]), traces)
+            lanes = W if c is None else W * c
 
             def body(st, tr):
                 return scan_accesses(sw, st, tr, backend=backend,
                                      consts=dyns, block=block)
 
             st, info = parallel.time_shard_scan(
-                body, _broadcast_state(cfg, (S, W)), traces, t_shards,
+                body, _broadcast_state(cfg, (S, lanes)), traces, t_shards,
                 batch="map" if backend == "pallas" else "vmap")
             run.last_time_shard_info = info
-            return jax.jit(_finalize, static_argnames="batch_dims")(
+            outs = jax.jit(_finalize, static_argnames="batch_dims")(
                 st, batch_dims=2)
+            if c is not None:
+                outs = jax.tree.map(
+                    lambda x: x.reshape(x.shape[:1] + (W, c)
+                                        + x.shape[2:]), outs)
+            return outs
 
     def run(dyns: Dyn, traces: dict):
         S = jax.tree.leaves(dyns)[0].shape[0]
-        W = jax.tree.leaves(traces)[0].shape[1]
-        stats, l2a, l2m, hd, ht, feats, pc4 = dispatch(dyns, traces)
+        leaf = jax.tree.leaves(traces)[0]
+        W = leaf.shape[1]
+        C = leaf.shape[2] if leaf.ndim >= 3 else None
+        stats, l2a, l2m, hd, ht, feats, pc4, shared = dispatch(dyns,
+                                                               traces)
         stats = jax.tree.map(jax.device_get, stats)
-        per = [[jax.tree.map(lambda x, s=s, w=w: x[s, w], stats)
-                for w in range(W)] for s in range(S)]
-        extras = [[_extras_of(cfg, l2a, l2m, hd, ht, feats, pc4,
-                              index=lambda x, s=s, w=w: x[s, w])
-                   for w in range(W)] for s in range(S)]
+        if C is None:
+            per = [[jax.tree.map(lambda x, s=s, w=w: x[s, w], stats)
+                    for w in range(W)] for s in range(S)]
+            extras = [[_extras_of(cfg, l2a, l2m, hd, ht, feats, pc4,
+                                  shared,
+                                  index=lambda x, s=s, w=w: x[s, w])
+                       for w in range(W)] for s in range(S)]
+            return per, extras
+        # multicore: per[s][w] / extras[s][w] are per-core lists
+        per = [[[jax.tree.map(lambda x, s=s, w=w, k=k: x[s, w, k], stats)
+                 for k in range(C)] for w in range(W)] for s in range(S)]
+        extras = [[[_extras_of(cfg, l2a, l2m, hd, ht, feats, pc4, shared,
+                               index=lambda x, s=s, w=w, k=k: x[s, w, k])
+                    for k in range(C)] for w in range(W)]
+                  for s in range(S)]
         return per, extras
 
     run.last_time_shard_info = None

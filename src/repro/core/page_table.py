@@ -91,13 +91,15 @@ def walk(
     lat: Lat,
     enable,
     geom: L2Geom | None = None,
+    dramc=None,
 ):
     """One native (or guest-PT-only) radix walk.
 
     Returns (hier, pwcs, cycles, n_dram).  `cycles` includes the PWC probe.
     All state updates are masked by `enable` (background walks pass True
     but callers discard `cycles`).  `geom` is the dynamic L2-cache view
-    for ladder-batched runs (None = static geometry).
+    for ladder-batched runs (None = static geometry); `dramc` gates the
+    die-stacked DRAM-cache probe (None = absent, compiled out).
     """
     en = jnp.asarray(enable)
     vpn2 = vpn4k >> 9
@@ -135,7 +137,7 @@ def walk(
     for slot in range(4):
         slot_en = en & (slot >= start) & (slot < n_levels)
         h, c, d = access_pte(h, lines[slot], pressure, tlb_aware, lat,
-                             slot_en, geom=geom)
+                             slot_en, geom=geom, dramc=dramc)
         cycles = cycles + c
         n_dram = n_dram + d.astype(jnp.int32)
 
@@ -148,7 +150,7 @@ def walk(
 
 def host_walk(h: Hier, gpn: jax.Array, pressure: jax.Array,
               tlb_aware: bool, lat: Lat, enable,
-              geom: L2Geom | None = None):
+              geom: L2Geom | None = None, dramc=None):
     """Host-PT walk (virt., no PWCs — paper Fig. 3 gives the host walker a
     nested TLB instead). 4 sequential PTE-line accesses through the caches.
     Returns (hier, cycles, n_dram, leaf_line)."""
@@ -157,7 +159,8 @@ def host_walk(h: Hier, gpn: jax.Array, pressure: jax.Array,
     cycles = jnp.int32(0)
     n_dram = jnp.int32(0)
     for ln in lines:
-        h, c, d = access_pte(h, ln, pressure, tlb_aware, lat, en, geom=geom)
+        h, c, d = access_pte(h, ln, pressure, tlb_aware, lat, en, geom=geom,
+                             dramc=dramc)
         cycles = cycles + c
         n_dram = n_dram + d.astype(jnp.int32)
     return h, cycles, n_dram, lines[3]

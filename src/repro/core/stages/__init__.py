@@ -10,9 +10,9 @@ from __future__ import annotations
 
 from repro.core.stages.base import (DYN_FIELDS, Dyn, Feats, MMUState,
                                     Request, SimConfig, Stage, StageResult,
-                                    Stats, WALK_HIST_BUCKETS, dyn_of,
-                                    l2_geom_of, make_state, zero_feats,
-                                    zero_stats)
+                                    Stats, WALK_HIST_BUCKETS, dramc_of,
+                                    dyn_of, l2_geom_of, make_state,
+                                    zero_feats, zero_stats)
 from repro.core.stages.l1_tlb import L1TLBStage
 from repro.core.stages.l2_tlb import L2TLBStage
 from repro.core.stages.l3_tlb import L3TLBStage
@@ -87,6 +87,7 @@ def fill_order(names: tuple[str, ...]) -> tuple[str, ...]:
 __all__ = [
     "DYN_FIELDS", "Dyn", "Feats", "MMUState", "Request", "STAGES",
     "SimConfig", "Stage", "StageResult", "Stats", "WALK_HIST_BUCKETS",
-    "WALK_STAGES", "default_stages", "dyn_of", "fill_order", "l2_geom_of",
-    "make_state", "validate_stages", "zero_feats", "zero_stats",
+    "WALK_STAGES", "default_stages", "dramc_of", "dyn_of", "fill_order",
+    "l2_geom_of", "make_state", "validate_stages", "zero_feats",
+    "zero_stats",
 ]

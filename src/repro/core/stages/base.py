@@ -88,6 +88,22 @@ class SimConfig:
     l3_sets: int = 2048   # 2MB/core
     l3_ways: int = 16
     lat: Lat = Lat()
+    # --- multicore (n_cores=1 is the single-core degenerate case: the
+    #     contention model below compiles out entirely, so every existing
+    #     system is bit-identical to its pre-multicore self)
+    n_cores: int = 1             # independent core lanes (a batch axis:
+    #   each core carries its own private L1/L2 TLB + Victima state as a
+    #   simulation lane; the shared tier is modeled by static capacity
+    #   partitioning — l3/pom/l3tlb/dramc sets divided by n_cores — plus
+    #   the rotating shared-port arbitration delay below)
+    shared_port_cyc: int = 2     # queueing delay per losing arbitration
+    #   slot at the shared tier's port (charged on L2-TLB misses)
+    shared_tier_stats: bool = False  # surface shared-L3 / DRAM-cache
+    #   occupancy counters in extras (multicore scenario bookkeeping;
+    #   off by default so single-core extras stay byte-identical)
+    # --- die-stacked DRAM cache below the L3 (0 sets = absent)
+    dram_cache_sets: int = 0
+    dram_cache_ways: int = 16
     # --- virtualization
     virt: bool = False           # nested paging 2-D walk
     ideal_shadow: bool = False   # I-SP: 1-D shadow walk, free updates
@@ -127,6 +143,8 @@ class Dyn(NamedTuple):
     l3tlb_en: jax.Array        # bool — hardware L3 TLB live on this lane
     pom_en: jax.Array          # bool — POM-TLB live on this lane
     rev_en: jax.Array          # bool — Revelator speculative stage live
+    dramc_en: jax.Array        # bool — die-stacked DRAM cache live on
+    #   this lane (masks the probe between the L3 and DRAM bit-exactly)
 
 
 # SimConfig fields a batched ladder may vary across members.  "victima",
@@ -136,7 +154,8 @@ class Dyn(NamedTuple):
 # state writes bit-exactly.
 DYN_FIELDS = ("l2tlb_sets", "l2tlb_ways", "l2tlb_lat", "l3tlb_lat",
               "l2_sets", "l2_ways", "victima",
-              "utopia", "restseg_ways", "l3tlb_sets", "pom", "revelator")
+              "utopia", "restseg_ways", "l3tlb_sets", "pom", "revelator",
+              "dram_cache_sets")
 
 
 def dyn_of(cfg: SimConfig) -> Dyn:
@@ -154,6 +173,7 @@ def dyn_of(cfg: SimConfig) -> Dyn:
         l3tlb_en=jnp.bool_(cfg.l3tlb_sets > 0),
         pom_en=jnp.bool_(cfg.pom),
         rev_en=jnp.bool_(cfg.revelator),
+        dramc_en=jnp.bool_(cfg.dram_cache_sets > 0),
     )
 
 
@@ -162,6 +182,19 @@ def l2_geom_of(dyn: "Dyn | None") -> L2Geom | None:
     if dyn is None:
         return None
     return L2Geom(set_mask=dyn.l2_set_mask, n_ways=dyn.l2_ways)
+
+
+def dramc_of(cfg: SimConfig, dyn: "Dyn | None"):
+    """The die-stacked DRAM-cache gate for cache-hierarchy accesses.
+
+    ``None`` compiles the probe out entirely — the base config has no
+    DRAM cache, so every pre-existing system keeps its exact compiled
+    graph.  When the (ladder-maximum) config has one, the gate is a
+    traced bool so lanes without it mask the probe off bit-exactly.
+    """
+    if cfg.dram_cache_sets <= 0:
+        return None
+    return jnp.bool_(True) if dyn is None else dyn.dramc_en
 
 
 class Stats(NamedTuple):
@@ -291,7 +324,8 @@ def make_state(cfg: SimConfig) -> MMUState:
         pom=make(cfg.pom_sets if cfg.pom else 1, cfg.pom_ways),
         pwcs=make_pwcs(),
         hier=make_hier(cfg.l1_sets, cfg.l1_ways, cfg.l2_sets, cfg.l2_ways,
-                       cfg.l3_sets, cfg.l3_ways),
+                       cfg.l3_sets, cfg.l3_ways,
+                       max(cfg.dram_cache_sets, 1), cfg.dram_cache_ways),
         ntlb=make(cfg.ntlb_sets if cfg.virt else 1, cfg.ntlb_ways),
         restseg4=make(cfg.restseg4_sets if cfg.utopia else 1,
                       cfg.restseg_ways if cfg.utopia else 1),

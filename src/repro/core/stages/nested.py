@@ -15,12 +15,13 @@ from repro.core.caches import (BT_NTLB, access_pte, l2_lookup,
                                l2_retag_to_tlb, l2_touch)
 from repro.core.page_table import (PWC_LAT, PWCs, _level_lines_2m,
                                    _level_lines_4k, host_walk)
-from repro.core.stages.base import Stage, StageResult, hash_h, l2_geom_of
+from repro.core.stages.base import (Stage, StageResult, dramc_of, hash_h,
+                                    l2_geom_of)
 from repro.core.stages.ptw import fill_walk_counters
 
 
 def nested_translate(cfg, st, gpn, pressure, l2_bypass, enable,
-                     geom=None, ven=None):
+                     geom=None, ven=None, dramc=None):
     """gPA-page -> hPA (virt.): nested TLB -> [Victima nested-TLB block] ->
     host walk.  Returns (st, cycles, host_walked, ntlb_hit, nvictima_hit).
 
@@ -53,7 +54,8 @@ def nested_translate(cfg, st, gpn, pressure, l2_bypass, enable,
 
     need_walk = miss & ~vhit
     hier, wc, ndram, _leaf = host_walk(
-        st.hier, gpn, pressure, cfg.tlb_aware, cfg.lat, need_walk, geom
+        st.hier, gpn, pressure, cfg.tlb_aware, cfg.lat, need_walk, geom,
+        dramc,
     )
     st = st._replace(hier=hier)
     cycles = cycles + wc
@@ -83,7 +85,8 @@ def nested_translate(cfg, st, gpn, pressure, l2_bypass, enable,
         if ven is not None:
             bg = bg & ven
         hier, _, bdram, _ = host_walk(st.hier, ev_tag, pressure,
-                                      cfg.tlb_aware, cfg.lat, bg, geom)
+                                      cfg.tlb_aware, cfg.lat, bg, geom,
+                                      dramc)
         pch = ptwcp.update_counters(st.pch, eidx, bdram >= 1, bg)
         l2c = l2_retag_to_tlb(hier.l2, ev_tag >> 3, BT_NTLB, pressure,
                               cfg.tlb_aware, bg, geom)
@@ -93,7 +96,7 @@ def nested_translate(cfg, st, gpn, pressure, l2_bypass, enable,
 
 
 def guest_walk_2d(cfg, st, vpn, is2m, pressure, l2_bypass, enable,
-                  geom=None, ven=None):
+                  geom=None, ven=None, dramc=None):
     """Nested-paging 2-D walk: every guest-PT access first resolves its own
     gPA->hPA via ``nested_translate``.  Returns (st, cycles, n_dram,
     n_host_walks, n_ntlb_hits, n_nvictima_hits)."""
@@ -129,13 +132,14 @@ def guest_walk_2d(cfg, st, vpn, is2m, pressure, l2_bypass, enable,
         # translate the guest-PT line's gPA page first
         st, ncyc, walked, nth, nvh = nested_translate(
             cfg, st, lines[slot] >> 6, pressure, l2_bypass, slot_en,
-            geom, ven,
+            geom, ven, dramc,
         )
         n_host = n_host + (walked & slot_en).astype(jnp.int32)
         n_nt_hit = n_nt_hit + nth.astype(jnp.int32)
         n_nv_hit = n_nv_hit + nvh.astype(jnp.int32)
         hier, c, d = access_pte(st.hier, lines[slot], pressure,
-                                cfg.tlb_aware, cfg.lat, slot_en, geom=geom)
+                                cfg.tlb_aware, cfg.lat, slot_en, geom=geom,
+                                dramc=dramc)
         st = st._replace(hier=hier)
         cycles = cycles + ncyc + c
         n_dram = n_dram + d.astype(jnp.int32)
@@ -148,7 +152,7 @@ def guest_walk_2d(cfg, st, vpn, is2m, pressure, l2_bypass, enable,
 
     # finally translate the data page's own gPA (gpn = vpn, identity map)
     st, ncyc, walked, nth, nvh = nested_translate(
-        cfg, st, vpn, pressure, l2_bypass, en, geom, ven)
+        cfg, st, vpn, pressure, l2_bypass, en, geom, ven, dramc)
     n_host = n_host + (walked & en).astype(jnp.int32)
     n_nt_hit = n_nt_hit + nth.astype(jnp.int32)
     n_nv_hit = n_nv_hit + nvh.astype(jnp.int32)
@@ -162,7 +166,7 @@ class NestedWalkStage(Stage):
         ven = None if req.dyn is None else req.dyn.victima_en
         st, wcyc, ndram, nhost, n_nt_hit, n_nv_hit = guest_walk_2d(
             cfg, st, req.vpn, req.is2m, req.pressure, req.l2_bypass, need,
-            l2_geom_of(req.dyn), ven,
+            l2_geom_of(req.dyn), ven, dramc_of(cfg, req.dyn),
         )
         info = {
             "walk_en": need, "ndram": ndram, "nhost": nhost,

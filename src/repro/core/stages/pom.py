@@ -12,7 +12,7 @@ import jax.numpy as jnp
 from repro.core.assoc import insert_lru, lookup
 from repro.core.caches import BT_TLB4, access_pte
 from repro.core.page_table import POM_BASE
-from repro.core.stages.base import Stage, StageResult, l2_geom_of
+from repro.core.stages.base import Stage, StageResult, dramc_of, l2_geom_of
 
 
 class POMStage(Stage):
@@ -28,6 +28,7 @@ class POMStage(Stage):
         hier, pc_cyc, _ = access_pte(
             st.hier, pom_line, req.pressure, cfg.tlb_aware, cfg.lat,
             probe, bt=BT_TLB4, geom=l2_geom_of(req.dyn),
+            dramc=dramc_of(cfg, req.dyn),
         )
         st = st._replace(hier=hier)
         hp, wp, sp = lookup(st.pom, req.key2)

@@ -10,7 +10,7 @@ import jax.numpy as jnp
 
 from repro.core import ptwcp
 from repro.core.page_table import walk
-from repro.core.stages.base import Stage, StageResult, l2_geom_of
+from repro.core.stages.base import Stage, StageResult, dramc_of, l2_geom_of
 
 
 def fill_walk_counters(cfg, st, req, out):
@@ -33,6 +33,7 @@ class RadixWalkStage(Stage):
         hier, pwcs, wcyc, ndram = walk(
             st.hier, st.pwcs, req.vpn, req.is2m, req.now, req.pressure,
             cfg.tlb_aware, cfg.lat, need, l2_geom_of(req.dyn),
+            dramc_of(cfg, req.dyn),
         )
         st = st._replace(hier=hier, pwcs=pwcs)
         info = {

@@ -44,7 +44,8 @@ import jax.numpy as jnp
 from repro.core.assoc import Assoc, lru_victim, set_index
 from repro.core.page_table import walk
 from repro.core.stages.base import (RevTable, Stage, StageResult,
-                                    l2_geom_of, ptwcp_walk_verdict)
+                                    dramc_of, l2_geom_of,
+                                    ptwcp_walk_verdict)
 from repro.core.stages.nested import guest_walk_2d
 
 
@@ -102,11 +103,12 @@ class RevelatorStage(Stage):
             ven = None if req.dyn is None else req.dyn.victima_en
             st, vcyc, _, _, _, _ = guest_walk_2d(
                 cfg, st, req.vpn, req.is2m, req.pressure, req.l2_bypass,
-                sig_hit, geom, ven)
+                sig_hit, geom, ven, dramc_of(cfg, req.dyn))
         else:
             hier, pwcs, vcyc, _ = walk(
                 st.hier, st.pwcs, req.vpn, req.is2m, req.now,
-                req.pressure, cfg.tlb_aware, cfg.lat, sig_hit, geom)
+                req.pressure, cfg.tlb_aware, cfg.lat, sig_hit, geom,
+                dramc_of(cfg, req.dyn))
             st = st._replace(hier=hier, pwcs=pwcs)
         vcyc = jnp.where(sig_hit, vcyc, 0)
 

@@ -31,8 +31,8 @@ from repro.core.assoc import (insert_lru, insert_lru_dyn, lookup,
                               lookup_dyn)
 from repro.core.caches import BT_TLB4, access_pte
 from repro.core.page_table import RESTSEG2_BASE, RESTSEG4_BASE
-from repro.core.stages.base import (Stage, StageResult, l2_geom_of,
-                                    ptwcp_walk_verdict)
+from repro.core.stages.base import (Stage, StageResult, dramc_of,
+                                    l2_geom_of, ptwcp_walk_verdict)
 
 
 class RestSegStage(Stage):
@@ -49,7 +49,8 @@ class RestSegStage(Stage):
                              RESTSEG4_BASE + s4)
         hier, cyc, _ = access_pte(st.hier, tag_line, req.pressure,
                                   cfg.tlb_aware, cfg.lat, probe,
-                                  bt=BT_TLB4, geom=l2_geom_of(req.dyn))
+                                  bt=BT_TLB4, geom=l2_geom_of(req.dyn),
+                                  dramc=dramc_of(cfg, req.dyn))
         st = st._replace(hier=hier)
 
         # probe both RestSegs; the access's page size selects the result

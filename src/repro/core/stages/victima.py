@@ -15,7 +15,7 @@ from repro.core import ptwcp
 from repro.core.caches import (BT_TLB2, BT_TLB4, l2_lookup, l2_retag_to_tlb,
                                l2_touch)
 from repro.core.page_table import walk
-from repro.core.stages.base import Stage, StageResult, l2_geom_of
+from repro.core.stages.base import Stage, StageResult, dramc_of, l2_geom_of
 
 
 class VictimaStage(Stage):
@@ -99,7 +99,7 @@ class VictimaStage(Stage):
             bg = bg & ven
         hier, pwcs, _, bdram = walk(
             st.hier, st.pwcs, bg_vpn4, ev2m, now, req.pressure,
-            cfg.tlb_aware, cfg.lat, bg, geom,
+            cfg.tlb_aware, cfg.lat, bg, geom, dramc_of(cfg, req.dyn),
         )
         ebt = jnp.where(ev2m, BT_TLB2, BT_TLB4)
         l2c = l2_retag_to_tlb(hier.l2, ev_vpn >> 3, ebt, req.pressure,

@@ -34,3 +34,20 @@ def translation_fraction(stats, ipa: float) -> float:
 
 def speedup(base_stats, new_stats, ipa: float) -> float:
     return total_cycles(base_stats, ipa) / max(total_cycles(new_stats, ipa), 1.0)
+
+
+def mix_total_cycles(stats_list, ipa_list) -> float:
+    """End-to-end cycles for a multiprogrammed mix: the cores run
+    concurrently, so the co-schedule finishes when the slowest lane
+    does (max over per-core analytical cycles)."""
+    return max(total_cycles(s, ipa)
+               for s, ipa in zip(stats_list, ipa_list))
+
+
+def weighted_speedup(base_list, new_list, ipa_list) -> float:
+    """Multiprogrammed speedup as the mean of per-core speedups (each
+    lane vs the same lane under the baseline scheme) — the standard
+    weighted-speedup metric for co-scheduled workloads."""
+    per = [speedup(b, n, ipa)
+           for b, n, ipa in zip(base_list, new_list, ipa_list)]
+    return sum(per) / max(len(per), 1)

@@ -12,7 +12,7 @@ asserts against a written artifact.
 
 :data:`FIELD_SOURCES` is the field→source table the derivation walks;
 the OB001 analyzer pass (``repro.analysis.obs_contract``) checks it
-stays closed over :data:`SCHEMA5_FIELDS` and only references declared
+stays closed over :data:`SCHEMA6_FIELDS` and only references declared
 names — no orphan hand-set fields can reappear.
 """
 from __future__ import annotations
@@ -31,6 +31,10 @@ SCHEMA4_FIELDS = (
     "t_shards", "t_rounds", "trace_gen_wall_s", "compile_plus_sim_wall_s",
 )
 SCHEMA5_FIELDS = SCHEMA4_FIELDS + ("trace_gen_true_wall_s", "trace_file")
+# Schema 6 = schema 5 plus the fill's core count (1 for single-core
+# ladders; C for multicore families running multiprogrammed mixes).
+# Schema-5 fields stay bit-compatible — same names, same rounding.
+SCHEMA6_FIELDS = SCHEMA5_FIELDS + ("cores",)
 
 # field -> (kind, arg) derivation source, all rooted at one ladder_fill
 # span subtree:
@@ -62,6 +66,7 @@ FIELD_SOURCES = {
     "compile_plus_sim_wall_s": ("sum_span_dur", names.SPAN_DISPATCH),
     "trace_gen_true_wall_s": ("sum_span_dur", names.SPAN_TRACE_GEN),
     "trace_file": ("trace_path", None),
+    "cores": ("attr", "cores"),
 }
 
 
@@ -104,7 +109,7 @@ def fill_spans(events: list[dict]) -> list[dict]:
 
 def fill_record(events: list[dict], fill_id: int | None = None,
                 trace_file: str | None = None) -> dict:
-    """Derive one schema-5 ladder-fill record from a fill's span subtree.
+    """Derive one schema-6 ladder-fill record from a fill's span subtree.
 
     `events` is either ``tracer().events`` (live) or
     :func:`read_trace` output (offline) — identical by construction.
@@ -137,7 +142,7 @@ def fill_record(events: list[dict], fill_id: int | None = None,
         and e.get("id") in sub and e["attrs"].get("fn") == dispatch_fn)
 
     rec: dict = {}
-    for field in SCHEMA5_FIELDS:
+    for field in SCHEMA6_FIELDS:
         kind, arg = FIELD_SOURCES[field]
         if kind == "attr":
             rec[field] = attrs.get(arg)
@@ -199,7 +204,7 @@ def check(events: list[dict], bench: dict,
 
     Every ``ladder_fills`` record must be reproduced bit-exactly by the
     trace-derived record at the same position — schema-4 fields always;
-    schema-5 extras when the artifact carries them.  Returns a list of
+    schema-5/6 extras when the artifact carries them.  Returns a list of
     mismatch strings (empty = pass).
     """
     problems: list[str] = []
@@ -210,7 +215,7 @@ def check(events: list[dict], bench: dict,
             f"artifact has {len(want)} ladder_fills but trace derives "
             f"{len(got)} fill records")
     for i, (w, g) in enumerate(zip(want, got)):
-        for field in SCHEMA5_FIELDS:
+        for field in SCHEMA6_FIELDS:
             if field not in w:
                 continue  # schema-4 artifact: extras absent, fine
             if field == "trace_file":

@@ -48,45 +48,62 @@ except ImportError:
 
 AXIS_SYS = "sys"
 AXIS_WL = "wl"
+AXIS_CORE = "core"
 AXIS_T = "t"
 
-__all__ = ["AXIS_SYS", "AXIS_WL", "AXIS_T", "MeshPlan", "plan_mesh",
-           "build_mesh", "shard_wrap", "shard_systems", "pick_t_shards",
-           "time_shard_scan"]
+__all__ = ["AXIS_SYS", "AXIS_WL", "AXIS_CORE", "AXIS_T", "MeshPlan",
+           "plan_mesh", "build_mesh", "shard_wrap", "shard_systems",
+           "pick_t_shards", "time_shard_scan"]
 
 
 @dataclasses.dataclass(frozen=True)
 class MeshPlan:
-    """A (sys x wl) device-mesh factorization for an S x W sweep grid."""
+    """A (sys x wl [x core]) device-mesh factorization of a sweep grid.
+
+    ``core_dim > 1`` adds a third mesh axis over the per-core trace
+    lanes of a multicore run ([T, W, C] traces); ``core_dim == 1``
+    (every single-core plan) keeps the exact 2-D mesh of before — the
+    core axis, when present, then runs as an inner vmap lane instead.
+    """
 
     sys_dim: int       # mesh extent along the system axis
     wl_dim: int        # mesh extent along the workload axis (divides W)
     n_systems: int     # unpadded S
     n_workloads: int   # W
     pad_systems: int   # S padded up to a sys_dim multiple
+    core_dim: int = 1  # mesh extent along the core axis (divides C)
+    n_cores: int = 1   # C (1 = single-core: traces have no core axis)
 
     @property
     def n_devices(self) -> int:
-        return self.sys_dim * self.wl_dim
+        return self.sys_dim * self.wl_dim * self.core_dim
 
     def describe(self) -> str:
+        if self.core_dim > 1:
+            return f"{self.sys_dim}x{self.wl_dim}x{self.core_dim}"
         return f"{self.sys_dim}x{self.wl_dim}"
 
 
 def plan_mesh(n_systems: int, n_workloads: int, n_devices: int | None = None,
-              force: tuple[int, int] | None = None) -> MeshPlan:
-    """Factorize the device count into a ("sys", "wl") mesh.
+              force: tuple[int, ...] | None = None,
+              n_cores: int = 1) -> MeshPlan:
+    """Factorize the device count into a ("sys", "wl"[, "core"]) mesh.
 
     Policy: the workload dim takes the largest divisor of W that also
     divides the device count (traces shard without padding); the system
     dim takes the remaining devices, capped at S (an 8-device host never
     runs a 2-system ladder 4x redundantly).  The system axis is then
     padded up to a ``sys_dim`` multiple — divisibility of S is never
-    required.  ``force=(sys, wl)`` overrides the factorization (the
-    ``--mesh`` debug flag); ``n_devices`` defaults to the visible device
-    count.  Empty grids are rejected up front: a sweep over zero systems
-    or zero workloads is always a caller bug, and letting it reach the
-    mesh reshape would produce an unrelated error.
+    required.  ``force=(sys, wl)`` or ``(sys, wl, core)`` overrides the
+    factorization (the ``--mesh`` debug flag); ``n_devices`` defaults to
+    the visible device count.  ``n_cores > 1`` declares a multicore run
+    ([T, W, C] traces): the core axis defaults to an inner vmap lane
+    (``core_dim=1``), and a 3-tuple ``force`` promotes it to a third
+    mesh dim (``core_dim`` must divide C exactly — core lanes, like
+    workloads, are never padded).  Empty grids are rejected up front: a
+    sweep over zero systems or zero workloads is always a caller bug,
+    and letting it reach the mesh reshape would produce an unrelated
+    error.
     """
     if n_systems <= 0:
         raise ValueError(
@@ -95,15 +112,28 @@ def plan_mesh(n_systems: int, n_workloads: int, n_devices: int | None = None,
         raise ValueError(
             f"empty ladder: no workloads to simulate "
             f"(n_workloads={n_workloads})")
+    if n_cores < 1:
+        raise ValueError(f"n_cores must be >= 1, got {n_cores}")
+    core_dim = 1
     if force is not None:
+        if len(force) not in (2, 3):
+            raise ValueError(
+                f"mesh force must be (sys, wl) or (sys, wl, core), "
+                f"got {force}")
         sys_dim, wl_dim = int(force[0]), int(force[1])
-        if sys_dim < 1 or wl_dim < 1:
+        core_dim = int(force[2]) if len(force) == 3 else 1
+        if sys_dim < 1 or wl_dim < 1 or core_dim < 1:
             raise ValueError(f"mesh dims must be >= 1, got {force}")
         if n_workloads % wl_dim != 0:
             raise ValueError(
                 f"mesh wl dim {wl_dim} does not divide the workload axis "
                 f"({n_workloads}); traces are never padded — pick a "
                 f"divisor (the system axis is the padded one)")
+        if core_dim > 1 and n_cores % core_dim != 0:
+            raise ValueError(
+                f"mesh core dim {core_dim} does not divide the core axis "
+                f"({n_cores}); core lanes are never padded — pick a "
+                f"divisor")
     else:
         d = n_devices if n_devices is not None else jax.local_device_count()
         wl_dim = max(k for k in range(1, min(d, n_workloads) + 1)
@@ -111,7 +141,8 @@ def plan_mesh(n_systems: int, n_workloads: int, n_devices: int | None = None,
         sys_dim = min(d // wl_dim, n_systems)
     pad = math.ceil(n_systems / sys_dim) * sys_dim
     return MeshPlan(sys_dim=sys_dim, wl_dim=wl_dim, n_systems=n_systems,
-                    n_workloads=n_workloads, pad_systems=pad)
+                    n_workloads=n_workloads, pad_systems=pad,
+                    core_dim=core_dim, n_cores=n_cores)
 
 
 def build_mesh(plan: MeshPlan) -> Mesh:
@@ -121,6 +152,10 @@ def build_mesh(plan: MeshPlan) -> Mesh:
         raise ValueError(
             f"mesh {plan.describe()} needs {plan.n_devices} devices but "
             f"only {len(devs)} are visible")
+    if plan.core_dim > 1:
+        grid = np.asarray(devs[: plan.n_devices]).reshape(
+            plan.sys_dim, plan.wl_dim, plan.core_dim)
+        return Mesh(grid, (AXIS_SYS, AXIS_WL, AXIS_CORE))
     grid = np.asarray(devs[: plan.n_devices]).reshape(
         plan.sys_dim, plan.wl_dim)
     return Mesh(grid, (AXIS_SYS, AXIS_WL))
@@ -149,8 +184,17 @@ def shard_wrap(fn, plan: MeshPlan):
     one jit cache entry and trace/lower exactly once.
     """
     mesh = build_mesh(plan)
-    specs = dict(in_specs=(P(AXIS_SYS), P(None, AXIS_WL)),
-                 out_specs=P(AXIS_SYS, AXIS_WL))
+    if plan.core_dim > 1:
+        # multicore 3-D mesh: trace leaves are [T, W, C] and every
+        # output leaf leads with [S_blk, W_blk, C_blk]
+        trace_spec = P(None, AXIS_WL, AXIS_CORE)
+        out_spec = P(AXIS_SYS, AXIS_WL, AXIS_CORE)
+    else:
+        # single-core (or inner-vmap core lanes): the exact 2-D specs
+        # of before; a trailing core axis, if any, stays replicated
+        trace_spec = P(None, AXIS_WL)
+        out_spec = P(AXIS_SYS, AXIS_WL)
+    specs = dict(in_specs=(P(AXIS_SYS), trace_spec), out_specs=out_spec)
     try:
         sharded = shard_map(fn, mesh=mesh, check_rep=False, **specs)
     except TypeError:  # newer jax dropped/renamed check_rep
@@ -168,8 +212,7 @@ def shard_wrap(fn, plan: MeshPlan):
         if pad:
             dyns = jax.tree.map(lambda x: _pad_sys(x, pad), dyns)
         dyns = jax.device_put(dyns, NamedSharding(mesh, P(AXIS_SYS)))
-        traces = jax.device_put(traces,
-                                NamedSharding(mesh, P(None, AXIS_WL)))
+        traces = jax.device_put(traces, NamedSharding(mesh, trace_spec))
         out = jitted(dyns, traces)
         if pad:
             out = jax.tree.map(lambda x: x[:S], out)

@@ -221,10 +221,14 @@ def _stack_traces(gens, n: int) -> dict:
         k: jnp.asarray(np.stack([g["trace"][k] for g in gens], axis=1))
         for k in gens[0]["trace"]
     }
-    stacked["ipa"] = jnp.asarray(
-        np.broadcast_to(
-            np.asarray([g["spec"].ipa for g in gens], np.float32),
-            (n, len(gens))))
+    # multiprogrammed-mix traces already carry per-lane "ipa" (and
+    # "core") leaves — stacked above like any other key; only synthesize
+    # the per-workload broadcast for plain single-core generators
+    if "ipa" not in stacked:
+        stacked["ipa"] = jnp.asarray(
+            np.broadcast_to(
+                np.asarray([g["spec"].ipa for g in gens], np.float32),
+                (n, len(gens))))
     return stacked
 
 
@@ -238,6 +242,12 @@ def run_batch(system: str, workloads=None, n: int = 150_000, seed: int = 0,
     access-loop implementation (bit-identical; never part of cache keys).
     """
     workloads = workloads or trace_gen.all_workloads()
+    if _sim_config(system, overrides).n_cores > 1:
+        # multicore: core lanes occupy the batch axis per workload/mix,
+        # so batch per-workload via run (same cache keys either way)
+        return {w: run(system, w, n=n, seed=seed, overrides=overrides,
+                       cache=cache, backend=backend, block=block)
+                for w in workloads}
     out = {}
     missing = []
     for w in workloads:
@@ -310,6 +320,10 @@ def run_ladder(ladder: str, workloads=None, n: int = 150_000,
         return out
     cfg = systems.ladder_base_config(ladder, members)
     dyns = systems.ladder_dyn(members)
+    # mix-aware dispatch: a multicore family generates [T, W, C]
+    # multiprogrammed traces (every "workload" is a mix spec — a plain
+    # name is the 1-component mix) and stores per-core result tuples
+    n_cores = cfg.n_cores
     # never shrink the dispatch width to the missing count: a
     # partially-cached rerun must reuse the SAME compiled [S, chunk]
     # shape (short groups pad below), and a forced mesh planned for
@@ -320,7 +334,8 @@ def run_ladder(ladder: str, workloads=None, n: int = 150_000,
     if time_shards > 1 and mesh is None:
         mesh = (1, 1)  # devices go to the ("t",) axis instead
     plan = parallel.plan_mesh(len(members), chunk,
-                              force=tuple(mesh) if mesh else None)
+                              force=tuple(mesh) if mesh else None,
+                              n_cores=n_cores)
     backend = mmu.resolve_backend(backend)
     # ONE runner for all chunks: every chunk dispatches the same
     # [S, chunk] shape, so the shard_map kernel traces/compiles once
@@ -339,7 +354,9 @@ def run_ladder(ladder: str, workloads=None, n: int = 150_000,
         ladder=ladder, n_systems=len(members), n_members=len(members),
         n_workloads=len(missing), sim_n=n,
         devices=jax.local_device_count(),
-        mesh=[plan.sys_dim, plan.wl_dim],
+        mesh=([plan.sys_dim, plan.wl_dim, plan.core_dim]
+              if plan.core_dim > 1 else [plan.sys_dim, plan.wl_dim]),
+        cores=n_cores,
         chunk=chunk, chunk_auto=auto, backend=backend,
         block=(mmu_step.pick_block(n, block)
                if backend == "pallas" else None),
@@ -349,6 +366,9 @@ def run_ladder(ladder: str, workloads=None, n: int = 150_000,
         # producer-side TRUE generation time: runs on a pool worker
         # thread, so the fill parent must be attached explicitly
         with obs.span(obs.names.SPAN_TRACE_GEN, parent=fill, wl=w):
+            if n_cores > 1:
+                return trace_gen.generate_mix(w, n=n, seed=seed,
+                                              n_cores=n_cores)
             return trace_gen.generate(w, n=n, seed=seed)
 
     with fill:
@@ -371,15 +391,23 @@ def run_ladder(ladder: str, workloads=None, n: int = 150_000,
                 # members lack (radix lanes riding a victima ladder):
                 # the runner derives the stages from cfg
                 with obs.span(obs.names.SPAN_DISPATCH,
-                              chunk_index=n_chunks, workloads=list(group)):
+                              chunk_index=n_chunks, workloads=list(group),
+                              cores=n_cores):
                     per, extras = run_fn(dyns, _stack_traces(padded, n))
                 n_chunks += 1
                 for si, s in enumerate(members):
                     for wi, (w, g) in enumerate(zip(group, gens)):
                         if w in out[s]:
                             continue  # pre-existing cell: keep cached bytes
-                        result = (_np_stats(per[si][wi]), extras[si][wi],
-                                  g["spec"])
+                        if n_cores > 1:
+                            # multicore cell: per-core tuples (one Stats/
+                            # extras per lane), spec = per-core spec tuple
+                            result = (
+                                tuple(_np_stats(p) for p in per[si][wi]),
+                                tuple(extras[si][wi]), g["spec"])
+                        else:
+                            result = (_np_stats(per[si][wi]),
+                                      extras[si][wi], g["spec"])
                         _store(_path(s, w, n, seed, None), result)
                         out[s][w] = result
         tinfo = getattr(run_fn, "last_time_shard_info", None)
@@ -408,12 +436,27 @@ def run(system: str, workload: str, n: int = 150_000, seed: int = 0,
     if got is not None:
         return got
 
-    gen = trace_gen.generate(workload, n=n, seed=seed)
     cfg = _sim_config(system, overrides)
+    stage_names = None if overrides else systems.get(system).stages
+    if cfg.n_cores > 1:
+        # multicore: `workload` is a mix spec (a plain name = the
+        # 1-component mix); the per-core lanes ride the vmapped batch
+        # axis, and the result is a per-core tuple like run_ladder's
+        gen = trace_gen.generate_mix(workload, n=n, seed=seed,
+                                     n_cores=cfg.n_cores)
+        trace = {k: jnp.asarray(v) for k, v in gen["trace"].items()}
+        per, extras = simulate_batch(cfg, trace, stage_names=stage_names,
+                                     backend=backend, block=block)
+        result = (tuple(_np_stats(s) for s in per), tuple(extras),
+                  gen["spec"])
+        if cache:
+            _store(path, result)
+        return result
+
+    gen = trace_gen.generate(workload, n=n, seed=seed)
     trace = {k: jnp.asarray(v) for k, v in gen["trace"].items()}
     trace["ipa"] = jnp.full((len(gen["trace"]["vpn"]),), gen["spec"].ipa,
                             jnp.float32)
-    stage_names = None if overrides else systems.get(system).stages
     stats, extras = simulate(cfg, trace, stage_names=stage_names,
                              backend=backend, block=block,
                              time_shards=time_shards)

@@ -18,10 +18,19 @@ select registry subsets by tag without listing names, e.g.
 
 Mesh debugging: ``--devices N`` forces N virtual host devices (sets
 ``--xla_force_host_platform_device_count`` before the first device
-query) and ``--mesh SxW`` pins the ladder ("sys", "wl") mesh
-factorization, e.g.
+query) and ``--mesh SxW`` (or ``SxWxC`` for multicore families) pins
+the ladder ("sys", "wl"[, "core"]) mesh factorization, e.g.
 
     python -m repro.sim.sweep --devices 4 --mesh 2x2 --tags headline
+
+Multicore: ``--cores C`` selects the registered C-core systems (per-core
+private TLBs over the shared contended L3/POM tier; see
+docs/architecture.md) and ``--mix bc+rnd+xs`` names a multiprogrammed
+co-schedule for them — repeatable, validated against the workload
+registry BEFORE anything compiles, and only applied to multicore
+families (single-core ladders keep their default workload list):
+
+    python -m repro.sim.sweep --cores 4 --mix bc+rnd+xs --mix dlrm+gen
 
 Backend selection: ``--backend {scan,pallas}`` picks the access-loop
 implementation (bit-identical results; pallas runs in interpreter mode
@@ -43,7 +52,7 @@ import time
 
 import repro.obs as obs
 from repro.core import mmu
-from repro.sim import systems
+from repro.sim import systems, trace_gen
 from repro.sim.runner import run_batch, run_ladder
 
 N = int(os.environ.get("REPRO_SIM_N", 150_000))
@@ -113,10 +122,11 @@ def parse_args(args):
         return val
 
     def _mesh(val, flag):
-        parts = _value(val, flag, "a SYSxWL value").split("x")
-        if len(parts) != 2 or not all(p.isdigit() for p in parts):
-            raise SystemExit(f"{flag} wants SYSxWL (e.g. 2x2), got {val!r}")
-        return int(parts[0]), int(parts[1])
+        parts = _value(val, flag, "a SYSxWL[xCORE] value").split("x")
+        if len(parts) not in (2, 3) or not all(p.isdigit() for p in parts):
+            raise SystemExit(f"{flag} wants SYSxWL or SYSxWLxCORE "
+                             f"(e.g. 2x2 or 1x2x2), got {val!r}")
+        return tuple(int(p) for p in parts)
 
     def _devices(val, flag):
         if not _value(val, flag, "a device count").isdigit() or int(val) < 1:
@@ -138,9 +148,24 @@ def parse_args(args):
     def _obs_trace(val, flag):
         return _value(val, flag, "a file path")
 
+    def _cores(val, flag):
+        if not _value(val, flag, "a core count").isdigit() or int(val) < 1:
+            raise SystemExit(f"{flag} wants a positive integer, got {val!r}")
+        return int(val)
+
+    def _mix(val, flag):
+        # validate the co-schedule spec's workload names HERE, before
+        # anything compiles — same contract as system names and --tags
+        val = _value(val, flag, "a workload mix like bc+rnd+xs")
+        try:
+            trace_gen.parse_mix(val)
+        except ValueError as e:
+            raise SystemExit(str(e)) from None
+        return val
+
     names, tags = [], []
     opts = {"mesh": None, "devices": None, "backend": None,
-            "time_shards": 1, "obs_trace": None}
+            "time_shards": 1, "obs_trace": None, "cores": None, "mix": []}
     it = iter(args or [])
     for a in it:
         if a == "--tags":
@@ -171,17 +196,26 @@ def parse_args(args):
         elif a.startswith("--obs-trace="):
             opts["obs_trace"] = _obs_trace(a.split("=", 1)[1],
                                            "--obs-trace=")
+        elif a == "--cores":
+            opts["cores"] = _cores(next(it, None), "--cores")
+        elif a.startswith("--cores="):
+            opts["cores"] = _cores(a.split("=", 1)[1], "--cores=")
+        elif a == "--mix":
+            opts["mix"].append(_mix(next(it, None), "--mix"))
+        elif a.startswith("--mix="):
+            opts["mix"].append(_mix(a.split("=", 1)[1], "--mix="))
         elif a.startswith("-"):
             raise SystemExit(
                 f"unknown option {a!r} (only --tags/--mesh/--devices/"
-                f"--backend/--time-shards/--obs-trace)")
+                f"--backend/--time-shards/--obs-trace/--cores/--mix)")
         else:
             names.append(a)
-    if opts["time_shards"] > 1 and opts["mesh"] not in (None, (1, 1)):
+    if opts["time_shards"] > 1 and opts["mesh"] is not None \
+            and any(d != 1 for d in opts["mesh"]):
         raise SystemExit(
             f"--time-shards needs a 1x1 ('sys', 'wl') mesh (devices go "
             f"to the 't' axis), got --mesh "
-            f"{opts['mesh'][0]}x{opts['mesh'][1]}")
+            f"{'x'.join(str(d) for d in opts['mesh'])}")
     return names, tags, opts
 
 
@@ -213,6 +247,19 @@ def main(selected=None):
             f"{', '.join(sorted(all_tags))}")
     for t in tags:
         selected += [n for n in systems.names(t) if n not in selected]
+    if opts["cores"] is not None:
+        mc = [n for n, s in systems.REGISTRY.items()
+              if "multicore" in s.tags
+              and s.config().n_cores == opts["cores"]]
+        if not mc:
+            known = sorted({s.config().n_cores
+                            for s in systems.REGISTRY.values()
+                            if "multicore" in s.tags})
+            raise SystemExit(
+                f"no registered multicore systems with n_cores="
+                f"{opts['cores']}; registered core counts: "
+                f"{', '.join(map(str, known))}")
+        selected += [n for n in mc if n not in selected]
     selected = selected or SYSTEMS
     t00 = time.time()
     done: set[str] = set()
@@ -223,8 +270,11 @@ def main(selected=None):
         if not todo:
             continue
         t0 = time.time()
-        run_ladder(ladder, n=N, members=todo, mesh=opts["mesh"],
-                   backend=opts["backend"],
+        # --mix co-schedules apply to multicore families only; every
+        # other family keeps its default workload list
+        wl = (opts["mix"] or None) if systems.mix_cores(todo) > 1 else None
+        run_ladder(ladder, n=N, members=todo, workloads=wl,
+                   mesh=opts["mesh"], backend=opts["backend"],
                    time_shards=opts["time_shards"])
         done.update(todo)
         print(f"[sweep] ladder:{ladder:>11s} x all  {time.time()-t0:7.1f}s "
@@ -234,7 +284,9 @@ def main(selected=None):
         if sysname in done:
             continue
         t0 = time.time()
-        run_batch(sysname, n=N, backend=opts["backend"])
+        wl = ((opts["mix"] or None)
+              if systems.config(sysname).n_cores > 1 else None)
+        run_batch(sysname, n=N, workloads=wl, backend=opts["backend"])
         print(f"[sweep] {sysname:>18s} x all  {time.time()-t0:7.1f}s "
               f"(total {time.time()-t00:7.0f}s)", flush=True)
 

@@ -182,6 +182,47 @@ register("revelator_virt", _REV_NP, "Revelator under nested paging (a "
 register("isp", _RADIX, "ideal shadow paging: 1-D walk, free updates",
          tags=("virt",), virt=True, ideal_shadow=True)
 
+# --------------------------------------------------------------- multicore
+# Per-core private TLB hierarchies (the core axis rides the trace's
+# [T, W, C] lanes) over a shared tier: the L3 cache and POM-TLB are
+# statically partitioned (total capacity / n_cores per core family) and
+# a rotating-port queueing delay models contention on the path past the
+# private L2 TLB (SimConfig.shared_port_cyc).  ``victima_dramc_*`` adds
+# the die-stacked DRAM cache below the L3.  The 1-core members are the
+# degenerate case — per-lane bit-identical to the single-core systems
+# above; ``shared_tier_stats`` both surfaces the shared-tier counters in
+# extras and keeps these families' ladder keys distinct from the native
+# family, whose compiled graph must stay byte-for-byte untouched.
+for _c in (1, 2, 4):
+    _mc = dict(n_cores=_c, shared_tier_stats=True,
+               l3_sets=2048 // _c, pom_sets=4096 // _c)
+    register(f"radix_{_c}c", _RADIX,
+             f"{_c}-core radix: private TLBs, shared contended L3",
+             tags=("multicore", f"{_c}c"), **_mc)
+    register(f"victima_{_c}c", _VICTIMA,
+             f"{_c}-core Victima over the shared contended tier",
+             tags=("multicore", f"{_c}c", "headline"), victima=True, **_mc)
+    register(f"pom_{_c}c", _POM,
+             f"{_c}-core POM-TLB (shared in-memory L3 TLB, partitioned)",
+             tags=("multicore", f"{_c}c"), pom=True, **_mc)
+    register(f"victima_dramc_{_c}c", _VICTIMA,
+             f"{_c}-core Victima + die-stacked DRAM cache below the L3",
+             tags=("multicore", f"{_c}c", "dramc"), victima=True,
+             dram_cache_sets=4096 // _c, **_mc)
+
+
+def mix_cores(members) -> int:
+    """Core-lane count shared by a ladder's members (mix-aware ladder
+    discovery: a >1 answer tells the runner/sweep to generate [T, W, C]
+    multiprogrammed-mix traces for this family)."""
+    cores = {config(n).n_cores for n in members}
+    if len(cores) != 1:
+        raise ValueError(
+            f"ladder members disagree on n_cores: {sorted(cores)} "
+            f"(n_cores is static — core-count variants are separate "
+            f"families)")
+    return cores.pop()
+
 
 # --------------------------------------------------------------- ladders
 #
@@ -255,6 +296,16 @@ def ladder_base_config(ladder: str | None = None, members=None) -> SimConfig:
                 f"ladder member {n!r}: l3tlb_sets={c.l3tlb_sets} differs "
                 f"from the ladder maximum {l3max} (the L3 TLB is "
                 f"gateable but not geometry-virtualized)")
+    # same contract for the die-stacked DRAM cache: an on/off gate
+    # (Dyn.dramc_en) but no set-mask virtualization
+    dcmax = max(c.dram_cache_sets for c in cfgs)
+    for n, c in zip(members, cfgs):
+        if c.dram_cache_sets not in (0, dcmax):
+            raise ValueError(
+                f"ladder member {n!r}: dram_cache_sets="
+                f"{c.dram_cache_sets} differs from the ladder maximum "
+                f"{dcmax} (the DRAM cache is gateable but not "
+                f"geometry-virtualized)")
     return dyn_base_config(cfgs)
 
 

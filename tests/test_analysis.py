@@ -132,12 +132,16 @@ def test_python_gate_splits_family_like_jx001():
 @pytest.mark.slow
 def test_all_ladder_families_one_compile():
     """The acceptance pin: native 28-member + virt 5-member families
-    are provably one-compile (alpha-equivalent canonical jaxprs)."""
+    are provably one-compile (alpha-equivalent canonical jaxprs), and
+    so is each 4-member multicore family (per-core private TLBs over
+    the shared contended tier, incl. the DRAM-cache variant)."""
     reports, findings = jaxpr_equiv.check_all()
     assert findings == []
     by = {r.family: r for r in reports}
     assert by["radix"].n_members == 28
     assert by["np"].n_members == 5
+    for c in (1, 2, 4):
+        assert by[f"radix_{c}c"].n_members == 4, c
     assert all(r.equivalent for r in reports)
     assert all(r.n_eqns > 0 for r in reports)
 
@@ -146,6 +150,7 @@ def test_family_metadata_matches_registry():
     meta = jaxpr_equiv.family_metadata()
     assert meta["radix"]["n_members"] == 28
     assert meta["np"]["n_members"] == 5
+    assert meta["radix_2c"]["n_members"] == 4
 
 
 # ------------------------------------------------- recompile guard

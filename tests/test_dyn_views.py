@@ -354,7 +354,7 @@ def test_sweep_rejects_unknown_systems_before_simulating():
 
 
 _NO_OPTS = {"mesh": None, "devices": None, "backend": None, "time_shards": 1,
-            "obs_trace": None}
+            "obs_trace": None, "cores": None, "mix": []}
 
 
 def test_sweep_parse_args_accepts_both_tag_forms():
@@ -378,7 +378,7 @@ def test_sweep_parse_args_mesh_and_devices():
         sweep.parse_args(["--mesh", "4"])
     with pytest.raises(SystemExit, match="positive integer"):
         sweep.parse_args(["--devices", "zero"])
-    with pytest.raises(SystemExit, match="needs a SYSxWL value"):
+    with pytest.raises(SystemExit, match=r"needs a SYSxWL\[xCORE\] value"):
         sweep.parse_args(["--mesh", "--tags"])
 
 

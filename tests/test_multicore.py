@@ -1,0 +1,295 @@
+"""Multicore MMU: per-core lanes, shared tier, mixes — equivalences.
+
+- n_cores=1 with every multicore knob at its default is the DEGENERATE
+  case: Stats bit-identical to the golden snapshot, and single-core
+  results keep the exact pre-multicore extras payload (no shared-tier
+  keys leak into their sim-cache entries);
+- ``generate_mix`` lane c == serial ``generate(names[c % k], n,
+  seed + MIX_SEED_SKEW*c)`` leaf-for-leaf (round-robin-with-skew
+  arbiter), plus the ``core``/``ipa`` lane leaves and per-core specs;
+- vmapped core lanes == per-core static sims bit-for-bit: the core
+  axis is just the batch axis, and the shared-tier contention term
+  depends only on the lane's own core id;
+- ``sweep.parse_args`` rejects unknown mix components and flag-like
+  values BEFORE anything compiles; ``--cores`` without a registered
+  core count dies in ``main`` before any simulation;
+- idle-lane metrics report 0.0 through ``reduction``/``rate`` (the
+  max(x, 1) bug class) instead of garbage;
+- [multidev] a 3-dim ("sys", "wl", "core") mesh fill writes cache
+  entries byte-identical to the forced single-device (1x1x1) run.
+"""
+import dataclasses
+import json
+import os
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from golden_trace import GOLDEN_CFG, GOLDEN_SYSTEMS, golden_trace, \
+    stats_to_jsonable
+from repro.core import metrics
+from repro.core.mmu import SimConfig, simulate, simulate_batch
+from repro.core.stages import default_stages
+from repro.sim import sweep, trace_gen
+
+multidev = pytest.mark.multidev
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
+                           "mmu_stats.json")
+
+PLAIN_EXTRAS = ["hist_reuse_data", "hist_reuse_tlb", "l2_access", "l2_miss"]
+SHARED_EXTRAS = ["dramc_access", "dramc_hit", "l3_access", "l3_trans"]
+
+
+# -------------------------------------------------- degenerate single-core
+
+
+def test_degenerate_multicore_matches_golden_snapshot():
+    """n_cores=1 + dram_cache_sets=0 (the explicit degenerate multicore
+    config) must stay bit-identical to the pre-multicore golden
+    snapshot — the whole refactor compiles out."""
+    with open(GOLDEN_PATH) as f:
+        snap = json.load(f)
+    d = SimConfig()
+    tr = {k: jnp.asarray(v) for k, v in golden_trace().items()}
+    for name, overrides in GOLDEN_SYSTEMS.items():
+        cfg = dataclasses.replace(
+            GOLDEN_CFG, n_cores=1, shared_port_cyc=d.shared_port_cyc,
+            shared_tier_stats=False, dram_cache_sets=0,
+            dram_cache_ways=d.dram_cache_ways, **overrides)
+        stats, extras = simulate(cfg, tr)
+        got = stats_to_jsonable(stats)
+        for field, want in snap[name].items():
+            assert got[field] == want, (name, field)
+        # single-core extras payload unchanged: shared-tier keys must
+        # NOT leak in, or every existing cache entry re-pickles dirty
+        assert sorted(extras) == PLAIN_EXTRAS, sorted(extras)
+
+
+def test_shared_tier_stats_opt_in_extras():
+    """shared_tier_stats=True surfaces the shared-tier counters even on
+    one core (the 1c multicore family uses this for apples-to-apples
+    scaling rows) without touching the plain keys."""
+    cfg = dataclasses.replace(GOLDEN_CFG, shared_tier_stats=True)
+    tr = {k: jnp.asarray(v) for k, v in golden_trace(n=2000).items()}
+    _, extras = simulate(cfg, tr)
+    assert sorted(extras) == sorted(PLAIN_EXTRAS + SHARED_EXTRAS)
+    assert extras["l3_access"] > 0
+    assert 0 <= extras["l3_trans"] <= extras["l3_access"]
+    assert extras["dramc_access"] == 0  # dram cache compiled out
+
+
+# -------------------------------------------------------------- mix arbiter
+
+
+def test_generate_mix_matches_serial_generate():
+    """Lane c of a mix == serial generate of its round-robin-assigned
+    workload under the per-core skewed seed, leaf-for-leaf."""
+    spec, n, seed, cores = "bc+rnd+xs", 512, 5, 4
+    names = trace_gen.parse_mix(spec)
+    g = trace_gen.generate_mix(spec, n=n, seed=seed, n_cores=cores)
+    assert len(g["spec"]) == cores
+    for c in range(cores):
+        want_name = names[c % len(names)]
+        ref = trace_gen.generate(want_name, n=n,
+                                 seed=seed + trace_gen.MIX_SEED_SKEW * c)
+        for k, v in ref["trace"].items():
+            assert np.array_equal(np.asarray(g["trace"][k][:, c]),
+                                  np.asarray(v)), (c, k)
+        assert g["spec"][c] == ref["spec"], c
+        assert np.all(np.asarray(g["trace"]["core"][:, c]) == c)
+        assert np.allclose(np.asarray(g["trace"]["ipa"][:, c]),
+                           ref["spec"].ipa)
+
+
+def test_generate_mix_seed_stable():
+    a = trace_gen.generate_mix("bc+rnd", n=256, seed=9, n_cores=2)
+    b = trace_gen.generate_mix("bc+rnd", n=256, seed=9, n_cores=2)
+    for k in a["trace"]:
+        assert np.array_equal(np.asarray(a["trace"][k]),
+                              np.asarray(b["trace"][k])), k
+
+
+def test_parse_mix_validation():
+    assert trace_gen.parse_mix("bc+rnd+xs") == ["bc", "rnd", "xs"]
+    assert trace_gen.parse_mix("bc") == ["bc"]
+    with pytest.raises(ValueError, match="unknown workload.*bogus"):
+        trace_gen.parse_mix("bc+bogus")
+    with pytest.raises(ValueError, match="malformed"):
+        trace_gen.parse_mix("bc++rnd")
+
+
+# ------------------------------------------------ vmapped-core equivalence
+
+
+def test_vmapped_cores_match_per_core_static_sims():
+    """The core axis is the batch axis: each lane of a 2-core mix sim
+    must be bit-identical to a static single-trace sim of the same
+    2-core config fed that lane's trace (incl. its core-id leaf, which
+    the shared-port contention term reads)."""
+    cfg = dataclasses.replace(GOLDEN_CFG, n_cores=2,
+                              shared_tier_stats=True)
+    g = trace_gen.generate_mix("bc+rnd", n=1200, seed=3, n_cores=2)
+    stacked = {k: jnp.asarray(v) for k, v in g["trace"].items()}
+    per, extras = simulate_batch(cfg, stacked)
+    assert len(per) == 2
+    for c in range(2):
+        lane = {k: v[:, c] for k, v in stacked.items()}
+        ref_stats, ref_extras = simulate(cfg, lane)
+        for field, a, b in zip(ref_stats._fields, ref_stats, per[c]):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), (c, field)
+        assert sorted(extras[c]) == sorted(ref_extras), c
+        for k in ref_extras:
+            assert np.array_equal(np.asarray(extras[c][k]),
+                                  np.asarray(ref_extras[k])), (c, k)
+
+
+def test_contention_differs_across_core_lanes():
+    """The shared-port queueing term depends on the lane's core id, so
+    two lanes running the SAME workload under n_cores=2 must diverge —
+    otherwise the contention model compiled out."""
+    cfg = dataclasses.replace(GOLDEN_CFG, n_cores=2)
+    g = trace_gen.generate_mix("bc+bc", n=1200, seed=3, n_cores=2)
+    stacked = {k: jnp.asarray(v) for k, v in g["trace"].items()}
+    per, _ = simulate_batch(cfg, stacked)
+    a, b = (int(np.asarray(p.sum_trans_cyc)) for p in per)
+    assert a != b, "core-id-dependent contention term had no effect"
+
+
+# ----------------------------------------------------------- CLI validation
+
+
+def test_sweep_rejects_unknown_mix_components():
+    with pytest.raises(SystemExit, match="unknown workload.*bogus"):
+        sweep.parse_args(["--mix", "bc+bogus"])
+    with pytest.raises(SystemExit, match="unknown workload"):
+        sweep.parse_args(["--mix=rnd+nope+xs"])
+
+
+def test_sweep_mix_flag_swallowing():
+    """`--mix --tags` must not swallow the next option as a mix spec."""
+    with pytest.raises(SystemExit, match="--mix needs"):
+        sweep.parse_args(["--mix", "--tags"])
+    with pytest.raises(SystemExit, match="--mix needs"):
+        sweep.parse_args(["--mix"])
+
+
+def test_sweep_cores_flag_validation():
+    with pytest.raises(SystemExit, match="positive integer"):
+        sweep.parse_args(["--cores", "x"])
+    with pytest.raises(SystemExit, match="positive integer"):
+        sweep.parse_args(["--cores=0"])
+    # an unregistered core count dies in main BEFORE any simulation
+    with pytest.raises(SystemExit, match="core counts: 1, 2, 4"):
+        sweep.main(["--cores", "3"])
+    names, tags, opts = sweep.parse_args(
+        ["--cores", "4", "--mix", "bc+rnd+xs", "--mix=dlrm+gen"])
+    assert opts["cores"] == 4
+    assert opts["mix"] == ["bc+rnd+xs", "dlrm+gen"]
+
+
+def test_sweep_mesh_accepts_core_dim():
+    _, _, opts = sweep.parse_args(["--mesh", "1x2x2"])
+    assert opts["mesh"] == (1, 2, 2)
+    with pytest.raises(SystemExit, match="SYSxWL"):
+        sweep.parse_args(["--mesh", "1x2x2x2"])
+
+
+# -------------------------------------------------------- idle-lane metrics
+
+
+def test_idle_lane_metrics_report_zero():
+    """Per-core rate/reduction metrics route through the guarded
+    reduction()/rate() helpers: an idle lane (zero baseline events)
+    reports exactly 0.0, not max(x, 1)-style garbage."""
+    assert metrics.reduction(0, 7) == 0.0
+    assert metrics.rate(5, 0) == 0.0
+    assert metrics.rate(3, 6) == 0.5
+    idle = types.SimpleNamespace(n_demand_ptw=0)
+    busy = types.SimpleNamespace(n_demand_ptw=100)
+    new = types.SimpleNamespace(n_demand_ptw=50)
+    per = metrics.per_core_ptw_reduction((busy, idle), (new, idle))
+    assert per == [0.5, 0.0]
+    assert metrics.mean_ptw_reduction((busy, idle), (new, idle)) == 0.25
+    assert metrics.mean_ptw_reduction((), ()) == 0.0
+    assert metrics.l3_translation_share({}) == 0.0
+    assert metrics.l3_translation_share(
+        {"l3_access": 10, "l3_trans": 4}) == 0.4
+    assert metrics.dramc_hit_rate({"dramc_access": 0, "dramc_hit": 0}) == 0.0
+
+
+# --------------------------------------------- multidev 3-dim mesh ladder
+
+
+_TINY_OV = dict(
+    l2tlb_sets=4, l2tlb_ways=4,
+    l1d4_sets=2, l1d4_ways=2, l1d2_sets=2, l1d2_ways=2,
+    l2_sets=64, l2_ways=8, l3_sets=64, l3_ways=8,
+    n_pages4=1 << 12, n_pages2=1 << 8, n_pagesh=1 << 8, n_feat=1 << 10,
+)
+
+
+def _tiny_mc_registry():
+    from repro.sim import systems
+
+    fake = {}
+    for name, extra in [("t_radix_2c", {}),
+                        ("t_victima_2c", {"victima": True})]:
+        ov = {**_TINY_OV, **extra, "n_cores": 2, "shared_tier_stats": True}
+        cfg = dataclasses.replace(SimConfig(), **ov)
+        fake[name] = systems.System(name=name, stages=default_stages(cfg),
+                                    overrides=ov)
+    return fake
+
+
+@multidev
+def test_run_ladder_3dim_mesh_cache_byte_identical(tmp_path, monkeypatch):
+    """A multicore ladder fill on a ("sys", "wl", "core") mesh must
+    write cache entries byte-identical to the forced single-device
+    (1x1x1) run — the core axis shards like any other batch axis."""
+    if jax.local_device_count() < 4:
+        pytest.skip("needs XLA_FLAGS=--xla_force_host_platform_device_count"
+                    "=4 (see the multidev CI job)")
+    from repro.sim import runner, systems
+
+    monkeypatch.setattr(systems, "REGISTRY", _tiny_mc_registry())
+    members = ("t_radix_2c", "t_victima_2c")
+    mixes, n, seed = ["bc+rnd", "xs+gen"], 800, 3
+
+    def fill(cache_dir, mesh):
+        monkeypatch.setattr(runner, "CACHE_DIR", str(cache_dir))
+        out = runner.run_ladder("tiny2c", workloads=mixes, n=n, seed=seed,
+                                members=members, chunk=2, mesh=mesh)
+        assert set(out) == set(members)
+        return out
+
+    out_multi = fill(tmp_path / "multi", (1, 2, 2))
+    out_single = fill(tmp_path / "single", (1, 1, 1))
+
+    perf = runner.LADDER_PERF[-2:]
+    assert perf[0]["mesh"] == [1, 2, 2]
+    # core_dim == 1 keeps the 2-element mesh form (schema compatibility)
+    assert perf[1]["mesh"] == [1, 1]
+    assert all(p["cores"] == 2 for p in perf)
+
+    for s in members:
+        for w in mixes:
+            key = runner._key(s, w, n, seed, None) + ".pkl"
+            with open(tmp_path / "multi" / key, "rb") as f:
+                blob_m = f.read()
+            with open(tmp_path / "single" / key, "rb") as f:
+                blob_s = f.read()
+            assert blob_m == blob_s, (s, w)
+            stats_m, extras_m, specs = out_multi[s][w]
+            stats_s, _, _ = out_single[s][w]
+            assert len(stats_m) == len(stats_s) == 2
+            assert tuple(sp.name for sp in specs) == tuple(w.split("+"))
+            for c, (a, b) in enumerate(zip(stats_m, stats_s)):
+                for field, x, y in zip(a._fields, a, b):
+                    assert np.array_equal(np.asarray(x), np.asarray(y)), \
+                        (s, w, c, field)
+            for c in range(2):
+                assert extras_m[c]["l3_access"] > 0, (s, w, c)

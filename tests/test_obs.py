@@ -2,7 +2,7 @@
 
 Covers the tentpole contracts: span nesting (implicit thread-local +
 explicit cross-thread parents, the ``run_ladder`` producer-pool shape),
-JSONL file <-> in-memory bit-exactness, the schema-5 round trip
+JSONL file <-> in-memory bit-exactness, the schema-6 round trip
 (``LADDER_PERF`` records reproduce offline from the raw trace), tracer
 overhead bounds, the metrics registry's tracer-safety under jit, the
 serve-path counters, the report/diff CLI, and the OB001 analyzer pass.
@@ -202,11 +202,12 @@ def ladder_fill(tmp_path_factory):
     obs.configure()
 
 
-def test_run_ladder_record_schema5(ladder_fill):
+def test_run_ladder_record_schema6(ladder_fill):
     rec = ladder_fill["rec"]
-    assert set(rec) == set(report.SCHEMA5_FIELDS)
+    assert set(rec) == set(report.SCHEMA6_FIELDS)
     assert rec["ladder"] == "np" and rec["n_members"] == 2
     assert rec["n_workloads"] == 2 and rec["sim_n"] == 128
+    assert rec["cores"] == 1  # single-core fill: the degenerate lane
     assert rec["one_compile"] is True
     assert rec["trace_file"] == ladder_fill["tr"].path
     assert rec["compile_plus_sim_wall_s"] > 0

@@ -216,8 +216,12 @@ def test_cache_key_golden_digests():
          "35f3abbee2b6e96a"),
         (("np", "rnd", 2_000, 7, {"l2tlb_lat": 17}),
          "bf3ddcef155371f6"),
+        # Lat-containing digests regenerated when Lat grew the `dramc`
+        # field (die-stacked DRAM cache): a Lat override now keys the
+        # new field too.  Deliberate — entries keyed on a Lat override
+        # predate the field and must not alias the new latency space.
         (("radix", "gen", 1_000, 1, {"lat": Lat(l2=20)}),
-         "e7b012ade52f2a89"),
+         "93c2444c4c17c805"),
         # numpy scalars key like the equivalent python number
         (("radix", "bc", 10, 0, {"l2_sets": np.int32(64)}),
          "608ce6642b850fb7"),
@@ -228,7 +232,7 @@ def test_cache_key_golden_digests():
          "f9fb80121a22570e"),
         (("revelator_virt", "gen", 150_000, 3,
           {"rev_sig_bits": np.int64(16), "lat": Lat()}),
-         "865863b1872ee57a"),
+         "80b1083c2726bdbb"),
     ]
     for args, want in cases:
         assert runner._key(*args) == want, args

@@ -54,6 +54,9 @@ def _tiny_config(name):
     if cfg.revelator:
         cfg = dataclasses.replace(cfg, rev_sets=16, rev_ways=4,
                                   rev_sig_bits=10)
+    if cfg.dram_cache_sets > 0:
+        cfg = dataclasses.replace(cfg, dram_cache_sets=16,
+                                  dram_cache_ways=4)
     return cfg
 
 
@@ -289,7 +292,8 @@ def test_ladder_discovery_regression():
     DYN_FIELDS-compatible set) is a sweep-throughput regression, not a
     crash — so assert count and membership explicitly."""
     ladders = systems.LADDERS
-    assert set(ladders) == {"radix", "np"}, ladders
+    assert set(ladders) == {"radix", "np",
+                            "radix_1c", "radix_2c", "radix_4c"}, ladders
     native = set(ladders["radix"])
     assert native >= {
         "radix", "victima", "pom", "utopia", "utopia_victima",
@@ -301,6 +305,12 @@ def test_ladder_discovery_regression():
     assert len(native) == 28, sorted(native)
     assert set(ladders["np"]) == {"np", "victima_virt", "pom_virt",
                                   "utopia_virt", "revelator_virt"}
+    # each multicore family batches its whole scheme set — including the
+    # die-stacked-DRAM-cache variant — into one compile per core count
+    for c in (1, 2, 4):
+        assert set(ladders[f"radix_{c}c"]) == {
+            f"radix_{c}c", f"victima_{c}c", f"pom_{c}c",
+            f"victima_dramc_{c}c"}, ladders[f"radix_{c}c"]
     # every registered system is either a ladder member or one of the
     # known singletons (configs differing beyond DYN_FIELDS)
     covered = {m for mem in ladders.values() for m in mem}
