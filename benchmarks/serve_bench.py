@@ -1,0 +1,98 @@
+"""BENCH_serve.json — serving load harness benchmark matrix.
+
+Replays open-loop arrival traces through the sharded serving engine
+(``repro.serve.load``) at two Poisson intensities × two lane counts plus
+one bursty-diurnal run, and writes the derived records to
+``BENCH_serve.json``.  Every field re-derives bit-exactly from the obs
+span trace::
+
+    REPRO_OBS_TRACE=obs_trace_serve.jsonl \
+        PYTHONPATH=src python benchmarks/serve_bench.py
+    PYTHONPATH=src python -m repro.obs report obs_trace_serve.jsonl \
+        --check BENCH_serve.json
+
+``--tune-gate`` closes the sim↔serving loop: the simulator's PTW-CP
+collect sweep refits the comparator box and its lower edges become the
+engine's cluster-install gate (``load.tune_gate``).
+
+``REPRO_SERVE_TICKS`` (or ``--ticks``) sizes the trace — CI runs a tiny
+smoke matrix; production runs stretch to hundreds of thousands of
+arrivals by raising ticks/rates.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+from repro.serve import engine, load
+
+
+def build_matrix(args, cfg):
+    """(run_name, arrival, rate, lanes, trace) for the benchmark grid."""
+    rates = [float(r) for r in args.rates.split(",")]
+    lane_counts = [int(x) for x in args.lanes.split(",")]
+    matrix = []
+    for lanes in lane_counts:
+        for rate in rates:
+            total = rate * lanes
+            matrix.append((
+                f"poisson_r{rate:g}_l{lanes}", "poisson", total, lanes,
+                load.poisson_trace(total, args.ticks, cfg, seed=17)))
+    # one bursty diurnal run at the top intensity on the widest mesh
+    lanes, rate = lane_counts[-1], rates[-1]
+    total = rate * lanes
+    matrix.append((
+        f"diurnal_r{rate:g}_l{lanes}", "diurnal", total, lanes,
+        load.diurnal_trace(total, args.ticks, cfg, seed=23)))
+    return matrix
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--ticks", type=int,
+                    default=int(os.environ.get("REPRO_SERVE_TICKS", 300)))
+    ap.add_argument("--rates", default="0.5,2.0",
+                    help="per-lane Poisson intensities (req/tick)")
+    ap.add_argument("--lanes", default="1,2",
+                    help="lane counts (mesh shapes when devices allow)")
+    ap.add_argument("--pool-pages", type=int, default=192,
+                    help="KV pool size per lane (small enough that the "
+                         "bursty run exercises pool backpressure)")
+    ap.add_argument("--tune-gate", action="store_true",
+                    help="fit the cluster-install gate from the "
+                         "simulator's PTW-CP collect sweep")
+    ap.add_argument("--tune-n", type=int, default=20_000,
+                    help="sim trace length for --tune-gate")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args(argv)
+
+    gate = (1, 1)
+    if args.tune_gate:
+        gate = load.tune_gate(n=args.tune_n)
+        print(f"PTW-CP refit gate (freq_min, cost_min) = {gate}")
+    cfg = engine.EngineConfig(n_pool_pages=args.pool_pages,
+                              gate_freq_min=gate[0], gate_cost_min=gate[1])
+
+    for name, arrival, rate, lanes, trace in build_matrix(args, cfg):
+        rec = load.run_load(trace, cfg, lanes=lanes, run=name,
+                            arrival=arrival, rate=rate)
+        print(f"{name:>24}: {rec['n_arrivals']:>5} arrivals  "
+              f"p50 {rec['decode_p50_s']}s p99 {rec['decode_p99_s']}s  "
+              f"{rec['throughput_rps']} req/s  "
+              f"vtc {rec['vtc_hit_rate']:.4f}  "
+              f"rejected {rec['rejected']} stall {rec['pool_stall']}")
+
+    art = {"schema": 1, "devices": jax.local_device_count(),
+           "gate": list(gate), "serve_runs": load.SERVE_PERF}
+    with open(args.out, "w", encoding="utf-8") as f:
+        json.dump(art, f, indent=1)
+        f.write("\n")
+    print(f"wrote {args.out} ({len(load.SERVE_PERF)} runs)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -16,37 +16,41 @@ def vtc_serving_hit_rates():
                               n_pool_pages=512, n_leaf_rows=64,
                               tc_sets=16, tc_ways=2, n_clusters=64)
     st = engine.init(cfg)
-    for s in range(8):
-        st = engine.admit(st, s, 2 + s % 3)
+    for slot in range(8):
+        st, _ok = engine.admit(st, slot, 2 + slot % 3)
     t0 = time.time()
     ticks = 700  # cross several 128-token block boundaries per slot
     step = jax.jit(lambda s: engine.decode_translate(s, cfg))
     for _ in range(ticks):
         # the instrumented entry point: per-tick latency lands in the
-        # obs registry's serve.decode_step_s histogram
-        st, phys, src = engine.decode_step(st, cfg, fn=step)
+        # obs registry's serve.decode_step_s[vtc] histogram (scoped per
+        # engine so the ablation below cannot contaminate it)
+        st, phys, src = engine.decode_step(st, cfg, fn=step, scope="vtc")
     us = (time.time() - t0) * 1e6 / (ticks * cfg.n_slots)
-    s = engine.stats(st)
-    lat = obs.REGISTRY.hist_stats(obs.names.HIST_DECODE_STEP_S)
-    # no-cluster ablation
+    stats_vtc = engine.stats(st, scope="vtc")
+    lat = obs.REGISTRY.hist_stats(
+        engine.scoped(obs.names.HIST_DECODE_STEP_S, "vtc"))
+    # no-cluster ablation — its own registry scope: the two engines'
+    # inc_to counters must never merge into a max-of-both
     cfg2 = engine.EngineConfig(n_slots=8, max_blocks_per_req=32,
                                n_pool_pages=512, n_leaf_rows=64,
                                tc_sets=16, tc_ways=2, n_clusters=1)
     st2 = engine.init(cfg2)
-    for s2i in range(8):
-        st2 = engine.admit(st2, s2i, 2 + s2i % 3)
+    for slot in range(8):
+        st2, _ok = engine.admit(st2, slot, 2 + slot % 3)
     step2 = jax.jit(lambda s_: engine.decode_translate(s_, cfg2))
     for _ in range(700):
         st2, _, _ = step2(st2)
-    sn = engine.stats(st2)
+    stats_novtc = engine.stats(st2, scope="novtc")
     return [
         ("serve_vtc_walk_rate", us,
-         f"{s['walk_rate']*100:.0f}% with clusters vs "
-         f"{sn['walk_rate']*100:.0f}% without (Victima layer)"),
-        ("serve_vtc_tc_hit", us, f"{s['tc_hit_rate']*100:.0f}%"),
-        ("serve_vtc_cluster_hit", us, f"{s['cluster_hit_rate']*100:.0f}%"),
+         f"{stats_vtc['walk_rate']*100:.0f}% with clusters vs "
+         f"{stats_novtc['walk_rate']*100:.0f}% without (Victima layer)"),
+        ("serve_vtc_tc_hit", us, f"{stats_vtc['tc_hit_rate']*100:.0f}%"),
+        ("serve_vtc_cluster_hit", us,
+         f"{stats_vtc['cluster_hit_rate']*100:.0f}%"),
         ("serve_vtc_hit_rate", us,
-         f"{s['vtc_hit_rate']*100:.0f}% walk-free translations"),
+         f"{stats_vtc['vtc_hit_rate']*100:.0f}% walk-free translations"),
         ("serve_decode_p99_us", lat["p99"] * 1e6,
          f"p50 {lat['p50']*1e6:.0f}us over {lat['count']} ticks"),
     ]

@@ -27,7 +27,7 @@ def main():
     st = engine.init(cfg)
     rng = np.random.default_rng(0)
     for s in range(args.slots):
-        st = engine.admit(st, s, int(rng.integers(1, 6)))
+        st, _ok = engine.admit(st, s, int(rng.integers(1, 6)))
     step = jax.jit(lambda s: engine.decode_translate(s, cfg))
 
     lifetimes = rng.integers(40, 160, size=args.slots)
@@ -40,7 +40,7 @@ def main():
             if ages[s] >= lifetimes[s]:
                 # retire + admit a fresh request (continuous batching)
                 st = engine.retire(st, s)
-                st = engine.admit(st, s, int(rng.integers(1, 6)))
+                st, _ok = engine.admit(st, s, int(rng.integers(1, 6)))
                 ages[s] = 0
                 lifetimes[s] = int(rng.integers(40, 160))
                 n_served += 1

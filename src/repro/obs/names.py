@@ -34,6 +34,14 @@ Span taxonomy (docs/architecture.md, "Observability"):
 
   serve.decode_step           one timed serving decode tick
                               (``serve.engine.decode_step``)
+
+  serve.load_run              one serving load-harness run (the unit
+                              BENCH_serve records); its descendants are
+                              the per-tick ``serve.decode_step`` spans
+                              and ``serve.*`` count events, so every
+                              BENCH_serve field re-derives from the
+                              run's subtree alone (OB001, schema-5
+                              discipline)
 """
 from __future__ import annotations
 
@@ -43,9 +51,10 @@ SPAN_TRACE_GEN = "trace_gen"
 SPAN_CHUNK_WAIT = "chunk_wait"
 SPAN_DISPATCH = "dispatch"
 SPAN_DECODE_STEP = "serve.decode_step"
+SPAN_SERVE_RUN = "serve.load_run"
 
 SPAN_NAMES = (SPAN_LADDER_FILL, SPAN_TRACE_GEN, SPAN_CHUNK_WAIT,
-              SPAN_DISPATCH, SPAN_DECODE_STEP)
+              SPAN_DISPATCH, SPAN_DECODE_STEP, SPAN_SERVE_RUN)
 
 # ------------------------------------------------------------ events
 EV_COMPILE = "xla_compile"
@@ -65,14 +74,19 @@ CTR_VTC_HIT_CLUSTER = "serve.vtc.hit_cluster"
 CTR_VTC_WALK = "serve.vtc.walk"
 CTR_VTC_INVALIDATE = "serve.vtc.invalidate"
 CTR_DECODE_STEPS = "serve.decode_steps"
+CTR_REQS_ADMITTED = "serve.admitted"
+CTR_REQS_RETIRED = "serve.retired"
+CTR_POOL_EXHAUSTED = "serve.pool_exhausted"
 
 GAUGE_PAGES_FREE = "serve.pages_free"
 GAUGE_SLOT_OCCUPANCY = "serve.slot_occupancy"
 
 HIST_DECODE_STEP_S = "serve.decode_step_s"
+HIST_REQ_TICKS = "serve.req_ticks"
 
 COUNTER_NAMES = (CTR_SIM_CACHE_HIT, CTR_SIM_CACHE_MISS,
                  CTR_SIM_CACHE_STORE, CTR_VTC_HIT_TC, CTR_VTC_HIT_CLUSTER,
-                 CTR_VTC_WALK, CTR_VTC_INVALIDATE, CTR_DECODE_STEPS)
+                 CTR_VTC_WALK, CTR_VTC_INVALIDATE, CTR_DECODE_STEPS,
+                 CTR_REQS_ADMITTED, CTR_REQS_RETIRED, CTR_POOL_EXHAUSTED)
 GAUGE_NAMES = (GAUGE_PAGES_FREE, GAUGE_SLOT_OCCUPANCY)
-HIST_NAMES = (HIST_DECODE_STEP_S,)
+HIST_NAMES = (HIST_DECODE_STEP_S, HIST_REQ_TICKS)

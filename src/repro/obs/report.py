@@ -70,6 +70,63 @@ FIELD_SOURCES = {
 }
 
 
+# BENCH_serve.json serving-run record schema — the load harness's
+# analogue of the ladder-fill record, rooted at one serve.load_run span
+# subtree.  Same discipline: the producer (serve.load.run_trace) does
+# not hand-assemble its SERVE_PERF record; it closes the run span and
+# calls serve_record on the tracer's in-memory events — the same
+# function the CLI applies to the JSONL, so `report --check` is
+# bit-exact for BENCH_serve exactly like BENCH_sweep.
+SERVE_FIELDS = (
+    "run", "arrival", "rate", "lanes", "mesh", "devices",
+    "n_slots", "n_pool_pages", "gate", "n_ticks", "n_arrivals",
+    "admitted", "rejected", "retired", "pool_stall", "invalidated",
+    "decode_p50_s", "decode_p99_s", "decode_mean_s", "wall_s",
+    "throughput_rps", "vtc_hit_tc", "vtc_hit_cluster", "vtc_walk",
+    "vtc_hit_rate", "trace_file",
+)
+
+# field -> (kind, arg) sources for SERVE_FIELDS, all rooted at one
+# serve.load_run span subtree:
+#   attr           run-span attribute `arg`
+#   sum_counts     sum of `n` over descendant count records named `arg`
+#   dur_quantile   `arg` = (span_name, p): quantile of descendant span
+#                  durations named span_name, the registry's hist
+#                  formula (p in {50, 99}; "mean" = sum/len), round 6
+#   span_dur       the run span's own dur_s, round 3
+#   derived        computed from other derived fields (`arg` names them)
+#   trace_path     the JSONL file the events came from
+SERVE_FIELD_SOURCES = {
+    "run": ("attr", "run"),
+    "arrival": ("attr", "arrival"),
+    "rate": ("attr", "rate"),
+    "lanes": ("attr", "lanes"),
+    "mesh": ("attr", "mesh"),
+    "devices": ("attr", "devices"),
+    "n_slots": ("attr", "n_slots"),
+    "n_pool_pages": ("attr", "n_pool_pages"),
+    "gate": ("attr", "gate"),
+    "n_ticks": ("attr", "n_ticks"),
+    "n_arrivals": ("attr", "n_arrivals"),
+    "admitted": ("sum_counts", names.CTR_REQS_ADMITTED),
+    "rejected": ("sum_counts", names.CTR_POOL_EXHAUSTED),
+    "retired": ("sum_counts", names.CTR_REQS_RETIRED),
+    "pool_stall": ("attr", "pool_stall"),
+    "invalidated": ("sum_counts", names.CTR_VTC_INVALIDATE),
+    "decode_p50_s": ("dur_quantile", (names.SPAN_DECODE_STEP, 50)),
+    "decode_p99_s": ("dur_quantile", (names.SPAN_DECODE_STEP, 99)),
+    "decode_mean_s": ("dur_quantile", (names.SPAN_DECODE_STEP, "mean")),
+    "wall_s": ("span_dur", None),
+    "throughput_rps": ("derived", ("retired", "wall_s")),
+    "vtc_hit_tc": ("attr", "vtc_hit_tc"),
+    "vtc_hit_cluster": ("attr", "vtc_hit_cluster"),
+    "vtc_walk": ("attr", "vtc_walk"),
+    "vtc_hit_rate": ("derived",
+                     ("vtc_hit_tc", "vtc_hit_cluster", "vtc_walk")),
+    "trace_file": ("trace_path", None),
+}
+
+
 def read_trace(path: str) -> list[dict]:
     """Parse a JSONL trace back into the tracer's event-list form."""
     events = []
@@ -166,6 +223,92 @@ def ladder_records(events: list[dict],
             for f in fill_spans(events)]
 
 
+# ----------------------------------------------------- serve records
+
+def serve_spans(events: list[dict]) -> list[dict]:
+    """All closed serve.load_run spans, in emission order."""
+    return [e for e in events
+            if e.get("kind") == "span"
+            and e.get("name") == names.SPAN_SERVE_RUN]
+
+
+def _quantile(samples: list[float], p) -> float | None:
+    """The registry's hist-stats quantile on a sorted copy (round 6)."""
+    if not samples:
+        return None
+    s = sorted(samples)
+    if p == "mean":
+        return round(sum(s) / len(s), 6)
+    return round(s[min(len(s) - 1, int(len(s) * p / 100))], 6)
+
+
+def serve_record(events: list[dict], run_id: int | None = None,
+                 trace_file: str | None = None) -> dict:
+    """Derive one BENCH_serve record from a serve.load_run span subtree.
+
+    Mirrors :func:`fill_record`: `events` is ``tracer().events`` (live)
+    or :func:`read_trace` output (offline) — identical by construction,
+    so the offline reconstruction is bit-exact.
+    """
+    runs = serve_spans(events)
+    if run_id is not None:
+        runs = [r for r in runs if r["id"] == run_id]
+    if not runs:
+        raise ValueError(
+            f"no closed '{names.SPAN_SERVE_RUN}' span"
+            + (f" with id {run_id}" if run_id is not None else "")
+            + " in trace")
+    run = runs[-1]
+    sub = _descendants(events, run["id"])
+    attrs = run["attrs"]
+
+    count_sums: dict[str, int] = {}
+    durs: dict[str, list[float]] = {}
+    for e in events:
+        if e.get("id") not in sub or e["id"] == run["id"]:
+            continue
+        if e.get("kind") == "count":
+            count_sums[e["name"]] = count_sums.get(e["name"], 0) \
+                + e.get("n", 1)
+        elif e.get("kind") == "span":
+            durs.setdefault(e["name"], []).append(e["dur_s"])
+
+    rec: dict = {}
+    for field in SERVE_FIELDS:
+        kind, arg = SERVE_FIELD_SOURCES[field]
+        if kind == "attr":
+            rec[field] = attrs.get(arg)
+        elif kind == "sum_counts":
+            rec[field] = count_sums.get(arg, 0)
+        elif kind == "dur_quantile":
+            rec[field] = _quantile(durs.get(arg[0], []), arg[1])
+        elif kind == "span_dur":
+            rec[field] = round(run["dur_s"], 3)
+        elif kind == "derived":
+            if field == "throughput_rps":
+                rec[field] = (round(rec["retired"] / rec["wall_s"], 3)
+                              if rec["wall_s"] else None)
+            elif field == "vtc_hit_rate":
+                hit = (rec["vtc_hit_tc"] or 0) \
+                    + (rec["vtc_hit_cluster"] or 0)
+                tot = hit + (rec["vtc_walk"] or 0)
+                rec[field] = round(hit / max(tot, 1), 6)
+            else:  # pragma: no cover - closed by OB001
+                raise ValueError(f"unknown derived field {field!r}")
+        elif kind == "trace_path":
+            rec[field] = trace_file
+        else:  # pragma: no cover - SERVE_FIELD_SOURCES is closed by OB001
+            raise ValueError(f"unknown source kind {kind!r} for {field!r}")
+    return rec
+
+
+def serve_records(events: list[dict],
+                  trace_file: str | None = None) -> list[dict]:
+    """One derived record per closed serve.load_run span, in order."""
+    return [serve_record(events, r["id"], trace_file)
+            for r in serve_spans(events)]
+
+
 # ----------------------------------------------------------- CLI verbs
 
 def rollup(events: list[dict], trace_file: str | None = None) -> dict:
@@ -191,6 +334,7 @@ def rollup(events: list[dict], trace_file: str | None = None) -> dict:
         "trace_file": trace_file,
         "n_events": len(events),
         "fills": ladder_records(events, trace_file),
+        "serve_runs": serve_records(events, trace_file),
         "spans": span_totals,
         "events": ev_counts,
         "counters": counters,
@@ -204,7 +348,9 @@ def check(events: list[dict], bench: dict,
 
     Every ``ladder_fills`` record must be reproduced bit-exactly by the
     trace-derived record at the same position — schema-4 fields always;
-    schema-5/6 extras when the artifact carries them.  Returns a list of
+    schema-5/6 extras when the artifact carries them.  A BENCH_serve
+    artifact's ``serve_runs`` records get the identical positional
+    treatment against :func:`serve_records`.  Returns a list of
     mismatch strings (empty = pass).
     """
     problems: list[str] = []
@@ -223,6 +369,22 @@ def check(events: list[dict], bench: dict,
             if w[field] != g[field]:
                 problems.append(
                     f"fill[{i}] field {field!r}: artifact has "
+                    f"{w[field]!r}, trace derives {g[field]!r}")
+    want_s = bench.get("serve_runs", [])
+    got_s = serve_records(events, trace_file) if want_s else []
+    if want_s and len(want_s) != len(got_s):
+        problems.append(
+            f"artifact has {len(want_s)} serve_runs but trace derives "
+            f"{len(got_s)} serve records")
+    for i, (w, g) in enumerate(zip(want_s, got_s)):
+        for field in SERVE_FIELDS:
+            if field not in w:
+                continue
+            if field == "trace_file":
+                continue  # path differs across machines by design
+            if w[field] != g[field]:
+                problems.append(
+                    f"serve_run[{i}] field {field!r}: artifact has "
                     f"{w[field]!r}, trace derives {g[field]!r}")
     return problems
 

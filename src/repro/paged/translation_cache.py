@@ -47,7 +47,27 @@ class VTC(NamedTuple):
     now: jax.Array
 
 
+def _pow2(v: int) -> bool:
+    return v >= 1 and (v & (v - 1)) == 0
+
+
 def make(tc_sets: int = 64, tc_ways: int = 4, n_clusters: int = 256) -> VTC:
+    # ``translate`` indexes sets with ``key & (S - 1)`` and hashes
+    # clusters via ``(n_cl - 1).bit_length()`` — both silently mis-index
+    # (aliasing distinct keys, skipping slots) unless the counts are
+    # powers of two, so reject anything else up front.  n_clusters=1
+    # (2^0) is the valid no-cluster ablation: the hash degenerates to
+    # slot 0 (see ``translate``).
+    if not _pow2(tc_sets):
+        raise ValueError(
+            f"tc_sets must be a power of two (set indexing is "
+            f"`key & (tc_sets - 1)`), got {tc_sets}")
+    if not _pow2(n_clusters):
+        raise ValueError(
+            f"n_clusters must be a power of two (the cluster hash takes "
+            f"the top `log2(n_clusters)` product bits), got {n_clusters}")
+    if tc_ways < 1:
+        raise ValueError(f"tc_ways must be >= 1, got {tc_ways}")
     z = jnp.zeros((tc_sets, tc_ways), jnp.int32)
     return VTC(
         tc_tags=z, tc_phys=z,
@@ -66,7 +86,8 @@ def _key(req, block):
     return (req << 20) | block
 
 
-def translate(vtc: VTC, bt: btab.BlockTables, req, block, pressure):
+def translate(vtc: VTC, bt: btab.BlockTables, req, block, pressure,
+              gate: tuple = (1, 1)):
     """Full Victima translation flow for one (req, block).
 
     Returns (vtc, bt, phys_page, source) with source 0=TC, 1=cluster,
@@ -74,6 +95,13 @@ def translate(vtc: VTC, bt: btab.BlockTables, req, block, pressure):
       miss in TC → probe cluster pages ∥ start walk; on walk completion
       the PTW-CP box decides whether to install the 8-translation cluster;
       TC refill always happens; TC eviction triggers a background install.
+
+    ``gate = (freq_min, cost_min)`` are the PTW-CP cluster-install
+    thresholds (static Python ints, part of the compiled graph).  The
+    default (1, 1) is the serving refit of the paper's box (see the
+    comment at the install site); ``(0, 0)`` is install-always.  The
+    serving load harness tunes these from the simulator's PTW-CP sweep
+    (``serve.load.tune_gate``).
     """
     now = vtc.now + 1
     vtc = vtc._replace(now=now)
@@ -93,8 +121,14 @@ def translate(vtc: VTC, bt: btab.BlockTables, req, block, pressure):
     # key's high bits, and low product bits only see low key bits — using
     # them would alias every request's region-0 onto slot 0
     nbits = (n_cl - 1).bit_length()
-    ci = jax.lax.shift_right_logical(
-        ckey * jnp.int32(-1640531535), 32 - nbits) & (n_cl - 1)
+    if nbits == 0:
+        # n_clusters=1 (the no-cluster ablation): the general expression
+        # would shift by 32 — undefined for int32 in XLA — before the
+        # `& 0` mask saves it; index slot 0 explicitly instead
+        ci = jnp.int32(0)
+    else:
+        ci = jax.lax.shift_right_logical(
+            ckey * jnp.int32(-1640531535), 32 - nbits) & (n_cl - 1)
     phys_cl = vtc.cl_phys[ci, block & (CLUSTER - 1)]
     # a cluster may predate the mapping of some of its 8 blocks (it then
     # holds FREE=-1 for them) — such entries fall through to the walk,
@@ -121,10 +155,12 @@ def translate(vtc: VTC, bt: btab.BlockTables, req, block, pressure):
     # refit its box from NN-2 (Fig. 16): our per-leaf-row counters are
     # lifetime counters, so the paper's cost≤12 upper bound (which filters
     # 500M-instr window pathologies) would permanently exclude every hot
-    # row once its 4-bit counter saturates.  Box: freq≥1 ∧ cost≥1.
+    # row once its 4-bit counter saturates — only LOWER bounds survive the
+    # refit, which is why ``gate`` carries (freq_min, cost_min) and no
+    # upper edge.  Default box: freq≥1 ∧ cost≥1.
     f = bt.walk_freq[leaf_row].astype(jnp.int32)
     c = bt.walk_cost[leaf_row].astype(jnp.int32)
-    pred = (f >= 1) & (c >= 1)
+    pred = (f >= int(gate[0])) & (c >= int(gate[1]))
     install = need_walk & pred
     base = block & ~(CLUSTER - 1)
     neigh = base + jnp.arange(CLUSTER)
@@ -168,14 +204,30 @@ def translate(vtc: VTC, bt: btab.BlockTables, req, block, pressure):
     return vtc, bt, phys, jnp.where(tc_hit, 0, jnp.where(cl_hit, 1, 2))
 
 
-def translate_batch(vtc: VTC, bt: btab.BlockTables, reqs, blocks, pressure):
-    """Sequential (scan) batch translation — the scheduler-side path."""
-    def body(carry, rb):
+def translate_batch(vtc: VTC, bt: btab.BlockTables, reqs, blocks, pressure,
+                    valid=None, gate: tuple = (1, 1)):
+    """Sequential (scan) batch translation — the scheduler-side path.
+
+    ``valid`` (bool [n], optional) masks lanes out of the batch entirely:
+    a masked lane touches NO state — no counters, no refills, no walk
+    side effects — and reports ``phys = -1, src = -1``.  The serving
+    engine uses this to keep dead slots from walking unmapped block 0
+    every tick and polluting the pressure signal.
+    """
+    if valid is None:
+        valid = jnp.ones(reqs.shape, jnp.bool_)
+
+    def body(carry, rbv):
         v, b = carry
-        v, b, phys, src = translate(v, b, rb[0], rb[1], pressure)
-        return (v, b), (phys, src)
+        req, block, ok = rbv[0], rbv[1], rbv[2].astype(jnp.bool_)
+        v2, b2, phys, src = translate(v, b, req, block, pressure, gate)
+        v = jax.tree.map(lambda old, new: jnp.where(ok, new, old), v, v2)
+        b = jax.tree.map(lambda old, new: jnp.where(ok, new, old), b, b2)
+        return (v, b), (jnp.where(ok, phys, -1), jnp.where(ok, src, -1))
+
     (vtc, bt), (phys, src) = jax.lax.scan(
-        body, (vtc, bt), jnp.stack([reqs, blocks], 1))
+        body, (vtc, bt),
+        jnp.stack([reqs, blocks, valid.astype(reqs.dtype)], 1))
     return vtc, bt, phys, src
 
 

@@ -50,10 +50,12 @@ AXIS_SYS = "sys"
 AXIS_WL = "wl"
 AXIS_CORE = "core"
 AXIS_T = "t"
+AXIS_LANE = "lane"
 
-__all__ = ["AXIS_SYS", "AXIS_WL", "AXIS_CORE", "AXIS_T", "MeshPlan",
-           "plan_mesh", "build_mesh", "shard_wrap", "shard_systems",
-           "pick_t_shards", "time_shard_scan"]
+__all__ = ["AXIS_SYS", "AXIS_WL", "AXIS_CORE", "AXIS_T", "AXIS_LANE",
+           "MeshPlan", "plan_mesh", "build_mesh", "shard_wrap",
+           "shard_systems", "pick_t_shards", "time_shard_scan",
+           "plan_lane_dim", "shard_lanes"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -331,3 +333,57 @@ def shard_systems(fn, dyns, traces, plan: MeshPlan | None = None):
     S = jax.tree.leaves(dyns)[0].shape[0]
     W = jax.tree.leaves(traces)[0].shape[1]
     return shard_wrap(fn, plan or plan_mesh(S, W))(dyns, traces)
+
+
+def plan_lane_dim(n_lanes: int, n_devices: int | None = None) -> int:
+    """Mesh extent for a 1-D ``("lane",)`` mesh over ``n_lanes`` lanes.
+
+    Largest divisor of ``n_lanes`` that fits the visible device count —
+    lanes, like workloads, are never padded (each lane is an independent
+    engine whose state must round-trip bit-exactly).  1 device → 1 (the
+    identity partitioning).
+    """
+    if n_lanes < 1:
+        raise ValueError(f"n_lanes must be >= 1, got {n_lanes}")
+    d = n_devices if n_devices is not None else jax.local_device_count()
+    if d < 1:
+        raise ValueError(f"n_devices must be >= 1, got {d}")
+    return max(k for k in range(1, min(d, n_lanes) + 1) if n_lanes % k == 0)
+
+
+def shard_lanes(fn, n_lanes: int, n_devices: int | None = None):
+    """Wrap a per-lane-batch ``fn`` for a 1-D ``("lane",)`` device mesh.
+
+    The serving load harness's mesh: every pytree argument and output of
+    ``fn`` leads with the lane axis ``[L, ...]`` (one engine per lane —
+    its slot pool, KV page pool, and VTC all ride that leading axis), so
+    sharding lane-batched state splits the slot and page pools across
+    the device mesh.  ``fn`` is typically ``jax.vmap`` of a single-lane
+    step; inside ``shard_map`` each device sees its ``[L/dim, ...]``
+    block.  As with ``shard_wrap``, the jit(shard_map) wrapper is built
+    ONCE here so every same-shape call hits one jit-cache entry, and a
+    1-device host runs the identical code path as an identity
+    partitioning.
+
+    Returns ``call(*args)`` with attribute ``mesh_dim`` (the lane-mesh
+    extent actually used).  Lanes must stay divisible: ``n_lanes`` is
+    never padded, so the mesh dim comes from ``plan_lane_dim``.
+    """
+    dim = plan_lane_dim(n_lanes, n_devices)
+    mesh = Mesh(np.asarray(jax.devices()[:dim]), (AXIS_LANE,))
+    spec = P(AXIS_LANE)
+    try:
+        sharded = shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec,
+                            check_rep=False)
+    except TypeError:  # newer jax dropped/renamed check_rep
+        sharded = shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec)
+    jitted = jax.jit(sharded)
+    sharding = NamedSharding(mesh, spec)
+
+    def call(*args):
+        args = jax.tree.map(
+            lambda x: jax.device_put(jnp.asarray(x), sharding), args)
+        return jitted(*args)
+
+    call.mesh_dim = dim
+    return call

@@ -288,7 +288,7 @@ def test_engine_stats_routes_through_registry(tr):
                               tc_sets=8, tc_ways=2, n_clusters=16)
     st = engine.init(cfg)
     for s in range(4):
-        st = engine.admit(st, s, 2)
+        st, _ok = engine.admit(st, s, 2)
     for _ in range(6):
         st, _, _ = engine.decode_step(st, cfg)
     st = engine.retire(st, 1)
@@ -319,7 +319,7 @@ def test_engine_retire_countable_under_jit(tr):
                               n_pool_pages=32, n_leaf_rows=16,
                               tc_sets=8, tc_ways=2, n_clusters=8)
     st = engine.init(cfg)
-    st = engine.admit(st, 0, 2)
+    st, _ok = engine.admit(st, 0, 2)
     # jit-traced retire: invalidation counts are tracers; the registry
     # guard must skip (not crash), and results must match the host path
     st_jit = jax.jit(lambda s: engine.retire(s, 0))(st)

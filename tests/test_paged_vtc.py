@@ -97,8 +97,9 @@ def test_engine_lifecycle():
                               n_pool_pages=128, n_leaf_rows=32,
                               tc_sets=8, tc_ways=2, n_clusters=32)
     st_ = engine.init(cfg)
-    st_ = engine.admit(st_, 0, 2)
-    st_ = engine.admit(st_, 1, 3)
+    st_, ok0 = engine.admit(st_, 0, 2)
+    st_, ok1 = engine.admit(st_, 1, 3)
+    assert bool(ok0) and bool(ok1)
     free0 = int(jnp.sum(st_.page_free))
     assert free0 == 128 - 5
     for _ in range(10):
